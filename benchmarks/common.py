@@ -1,0 +1,36 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+
+from __future__ import annotations
+
+import time
+
+
+class Csv:
+    """Collects `name,us_per_call,derived` rows (plus free-form derived
+    key=val pairs) and prints them at the end of each benchmark."""
+
+    def __init__(self, title: str):
+        self.title = title
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float = 0.0, **derived):
+        d = ";".join(f"{k}={v}" for k, v in derived.items())
+        self.rows.append((name, us_per_call, d))
+
+    def emit(self) -> str:
+        out = [f"# {self.title}", "name,us_per_call,derived"]
+        for name, us, d in self.rows:
+            out.append(f"{name},{us:.2f},{d}")
+        text = "\n".join(out)
+        print(text, flush=True)
+        return text
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    """(result, mean_us)."""
+    fn(*args, **kw)  # warm
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, us

@@ -1,0 +1,88 @@
+"""Figs. 4.4-4.8 — task merging: makespan and deadline-miss-rate impact.
+
+Validation targets:
+  * Fig 4.4: merging saves ~4-9% makespan, growing with oversubscription.
+  * Fig 4.5: merging reduces miss rate (up to ~18%); at high load
+    aggressive ≥ conservative.
+  * Fig 4.7: higher execution-time uncertainty (5SD/10SD) preserves gains
+    for adaptive merging.
+"""
+
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from repro.core.simulation import SimConfig, Simulator, VideoOracle
+from repro.core.tasks import Machine
+from repro.core.workload import video_streaming_workload
+
+from .common import Csv
+
+
+def _run(n_tasks, merging, heuristic="FCFS-RR", pf=None, uncertainty=1.0,
+         seed=3, span=350.0):
+    wl = video_streaming_workload(n_tasks, span=span, seed=seed)
+    machines = [Machine(mid=i, queue_size=4) for i in range(8)]
+    oracle = VideoOracle(wl.exec_model, wl.videos, seed=seed,
+                         uncertainty_mult=uncertainty)
+    sim = Simulator([copy.copy(t) for t in wl.tasks], machines, oracle,
+                    SimConfig(heuristic=heuristic, merging=merging,
+                              position_finder=pf, seed=seed))
+    return sim.run()
+
+
+def run(csv: Csv, loads=(700, 1000, 1400), seeds=(3, 11, 29)) -> dict:
+    checks = {}
+
+    # --- Fig 4.4: makespan ------------------------------------------------
+    saving_by_load = {}
+    for n in loads:
+        base = np.mean([_run(n, "none", seed=s).makespan for s in seeds])
+        for pol in ("aggressive", "conservative", "adaptive"):
+            mk = np.mean([_run(n, pol, seed=s).makespan for s in seeds])
+            sav = 100 * (1 - mk / base)
+            saving_by_load[(pol, n)] = sav
+            csv.add(f"fig4.4_makespan_{pol}_{n}",
+                    saving_pct=round(sav, 1), base_makespan=round(base, 1))
+    checks["makespan_saved"] = all(v > 0 for v in saving_by_load.values())
+    checks["makespan_grows_with_load"] = (
+        saving_by_load[("adaptive", loads[-1])]
+        >= saving_by_load[("adaptive", loads[0])] - 2.0)
+
+    # --- Fig 4.5: deadline-miss-rate reduction by queuing policy ----------
+    mr_red = {}
+    for heur in ("FCFS-RR", "EDF", "MU"):
+        base = np.mean([_run(loads[1], "none", heuristic=heur, seed=s)
+                        .miss_rate for s in seeds])
+        for pol in ("conservative", "aggressive", "adaptive"):
+            mr = np.mean([_run(loads[1], pol, heuristic=heur, seed=s)
+                          .miss_rate for s in seeds])
+            red = 100 * (base - mr)
+            mr_red[(heur, pol)] = red
+            csv.add(f"fig4.5_missrate_{heur}_{pol}",
+                    reduction_pts=round(red, 1),
+                    base_missrate=round(100 * base, 1))
+    checks["merging_cuts_misses"] = any(v > 0 for v in mr_red.values())
+
+    # --- Fig 4.6: position finder -----------------------------------------
+    for pol in ("aggressive",):
+        base = np.mean([_run(loads[1], pol, seed=s).miss_rate
+                        for s in seeds])
+        with_pf = np.mean([_run(loads[1], pol, pf="linear", seed=s)
+                           .miss_rate for s in seeds])
+        csv.add(f"fig4.6_pfind_{pol}",
+                missrate_no_pf=round(100 * base, 1),
+                missrate_pf=round(100 * with_pf, 1))
+
+    # --- Fig 4.7: execution-time uncertainty ------------------------------
+    for mult, tag in ((5.0, "5SD"), (10.0, "10SD")):
+        base = np.mean([_run(loads[1], "none", uncertainty=mult, seed=s)
+                        .miss_rate for s in seeds])
+        adapt = np.mean([_run(loads[1], "adaptive", uncertainty=mult, seed=s)
+                         .miss_rate for s in seeds])
+        csv.add(f"fig4.7_uncertainty_{tag}",
+                reduction_pts=round(100 * (base - adapt), 1))
+        checks[f"uncertainty_{tag}_still_helps"] = adapt <= base + 0.01
+    return checks

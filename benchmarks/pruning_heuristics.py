@@ -1,0 +1,91 @@
+"""Figs. 5.10-5.13 — the pruning mechanism plugged into standard heuristics.
+
+Validation targets:
+  * batch-mode HC heuristics (MM/MSD/MMU) gain robustness from "-P"
+    (Fig 5.12), most at high oversubscription;
+  * homogeneous heuristics (EDF/SJF/FCFS) gain too (Fig 5.13);
+  * the Schmitt-triggered toggle beats always-on dropping at low load
+    (Fig 5.10).
+"""
+
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from repro.core.pmf import DropMode
+from repro.core.pruning import PruningConfig
+from repro.core.simulation import PETOracle, SimConfig, Simulator
+from repro.core.workload import spiky_hc_workload
+
+from .common import Csv
+
+
+def _run(n_tasks, heuristic, prune: PruningConfig | None, seed=5,
+         homogeneous=False, span=300.0):
+    wl = spiky_hc_workload(n_tasks, span=span, seed=seed,
+                           homogeneous=homogeneous)
+    sim = Simulator([copy.copy(t) for t in wl.tasks],
+                    [copy.deepcopy(m) for m in wl.machines],
+                    PETOracle(wl.pet, seed=seed + 1),
+                    SimConfig(heuristic=heuristic, pruning=prune,
+                              hard_deadlines=True, seed=seed))
+    return sim.run()
+
+
+def _p(defer=0.3, **kw) -> PruningConfig:
+    return PruningConfig(initial_defer_threshold=defer,
+                         base_drop_threshold=0.25, rho=0.1,
+                         compaction_bucket=2, **kw)
+
+
+def run(csv: Csv, loads=(400, 700), seeds=(5, 17)) -> dict:
+    checks = {}
+
+    # --- Fig 5.12: batch-mode HC heuristics --------------------------------
+    gains = {}
+    for heur in ("MM", "MSD", "MMU"):
+        for n in loads:
+            base = np.mean([_run(n, heur, None, seed=s).robustness
+                            for s in seeds])
+            pr = np.mean([_run(n, heur, _p(0.0 if heur == "MM" else 0.3),
+                               seed=s).robustness for s in seeds])
+            gains[(heur, n)] = pr - base
+            csv.add(f"fig5.12_{heur}_{n}", base=round(base, 3),
+                    pruned=round(pr, 3), gain=round(pr - base, 3))
+    checks["msd_mmu_gain"] = all(gains[(h, n)] > 0 for h in ("MSD", "MMU")
+                                 for n in loads)
+    checks["mm_not_hurt_much"] = all(gains[("MM", n)] > -0.05 for n in loads)
+
+    # --- Fig 5.13: homogeneous heuristics ----------------------------------
+    for heur in ("FCFS-RR", "EDF", "SJF"):
+        n = loads[-1]
+        base = np.mean([_run(n, heur, None, seed=s, homogeneous=True)
+                        .robustness for s in seeds])
+        pr = np.mean([_run(n, heur, _p(0.25), seed=s, homogeneous=True)
+                      .robustness for s in seeds])
+        csv.add(f"fig5.13_{heur}_{n}", base=round(base, 3),
+                pruned=round(pr, 3))
+        checks[f"homog_{heur}"] = pr >= base - 0.05
+
+    # --- Fig 5.10: toggle vs always-on dropping at LOW load ----------------
+    low = loads[0] // 2
+    never = np.mean([_run(low, "MSD", _p(0.0, toggle_on=1e9), seed=s)
+                     .robustness for s in seeds])        # dropping never fires
+    toggled = np.mean([_run(low, "MSD", _p(0.0), seed=s).robustness
+                       for s in seeds])
+    always = np.mean([_run(low, "MSD",
+                           _p(0.0, toggle_on=0.0, use_schmitt=False),
+                           seed=s).robustness for s in seeds])
+    csv.add("fig5.10_low_load", never=round(never, 3),
+            toggled=round(toggled, 3), always_on=round(always, 3))
+    checks["toggle_sane"] = toggled >= min(never, always) - 0.05
+
+    # --- EVICT mode (executing-task dropping, Eq. 5.5) ----------------------
+    ev = np.mean([_run(loads[-1], "MSD",
+                       _p(0.3, drop_mode=DropMode.EVICT_DROP,
+                          drop_running=True), seed=s).robustness
+                  for s in seeds])
+    csv.add("evict_mode_msd", robustness=round(ev, 3))
+    return checks

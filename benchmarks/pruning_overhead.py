@@ -1,0 +1,86 @@
+"""Fig. 5.20 — overhead of the pruning mechanism and the §5.5 mitigations
+(memoization + impulse compaction), plus the Pallas pmf_conv kernel's
+batched equivalent.
+
+Validation targets: compaction + memoization cut the convolution count and
+wall overhead substantially with little robustness impact; the batched
+kernel path matches the scalar path's decisions.
+"""
+
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from repro.core.pmf import PMF, chance_of_success
+from repro.core.pruning import PruningConfig
+from repro.core.simulation import PETOracle, SimConfig, Simulator
+from repro.core.workload import spiky_hc_workload
+from repro.kernels.pmf_conv.ops import batched_success
+
+from .common import Csv
+
+
+def _sim(n_tasks, prune, seed=5):
+    wl = spiky_hc_workload(n_tasks, span=300.0, seed=seed)
+    sim = Simulator([copy.copy(t) for t in wl.tasks],
+                    [copy.deepcopy(m) for m in wl.machines],
+                    PETOracle(wl.pet, seed=seed + 1),
+                    SimConfig(heuristic="MSD", pruning=prune,
+                              hard_deadlines=True, seed=seed))
+    t0 = time.perf_counter()
+    stats = sim.run()
+    return stats, time.perf_counter() - t0, sim.pruner
+
+
+def run(csv: Csv, load=500) -> dict:
+    checks = {}
+    naive = PruningConfig(initial_defer_threshold=0.3, memoize=False)
+    memo = PruningConfig(initial_defer_threshold=0.3)
+    memo_c = PruningConfig(initial_defer_threshold=0.3, compaction_bucket=4)
+
+    s0, t_naive, pr0 = _sim(load, naive)
+    s1, t_memo, pr1 = _sim(load, memo)
+    s2, t_both, pr2 = _sim(load, memo_c)
+    csv.add("fig5.20_naive", us_per_call=t_naive * 1e6,
+            robustness=round(s0.robustness, 3),
+            convolutions=int(pr0.stats["convolutions"]))
+    csv.add("fig5.20_memoized", us_per_call=t_memo * 1e6,
+            robustness=round(s1.robustness, 3),
+            convolutions=int(pr1.stats["convolutions"]),
+            overhead_reduction_pct=round(100 * (1 - t_memo / t_naive), 1))
+    csv.add("fig5.20_memo_compacted", us_per_call=t_both * 1e6,
+            robustness=round(s2.robustness, 3),
+            convolutions=int(pr2.stats["convolutions"]),
+            overhead_reduction_pct=round(100 * (1 - t_both / t_naive), 1))
+    checks["memoization_speeds_up"] = t_memo < t_naive
+    checks["memoization_cuts_convolutions"] = \
+        pr1.stats["convolutions"] < 0.5 * pr0.stats["convolutions"]
+    checks["optimizations_keep_robustness"] = \
+        s2.robustness > s0.robustness - 0.08
+
+    # --- batched kernel equivalence + throughput ---------------------------
+    rng = np.random.default_rng(0)
+    pets, pcts, dls = [], [], []
+    for _ in range(256):
+        e = PMF.from_normal(rng.uniform(8, 30), rng.uniform(1, 5))
+        c = PMF.from_normal(rng.uniform(10, 60), rng.uniform(2, 8))
+        pets.append(e)
+        pcts.append(c)
+        dls.append(int(e.mean() + c.mean() + rng.integers(-10, 15)))
+    t0 = time.perf_counter()
+    got = batched_success(pets, pcts, dls, length=128)
+    t_kernel = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    want = np.array([chance_of_success(e, c, d) for e, c, d
+                     in zip(pets, pcts, dls)])
+    t_scalar = time.perf_counter() - t0
+    err = float(np.max(np.abs(got - want)))
+    csv.add("pmf_conv_kernel_256pairs", us_per_call=t_kernel * 1e6,
+            scalar_us=round(t_scalar * 1e6, 1), max_abs_err=round(err, 6))
+    # tolerance covers the fixed-grid tail-fold (impulse compaction's
+    # max-range clamp) on long-support PMFs
+    checks["kernel_matches_scalar"] = err < 5e-3
+    return checks

@@ -1,0 +1,49 @@
+"""§Roofline — summarize the multi-pod dry-run results into the per-cell
+roofline table (reads results/dryrun.jsonl produced by
+``python -m repro.launch.dryrun --all``).
+
+If the dry-run artifact is missing, runs one representative cell in-process
+(requires the 512-device XLA flag, so benchmarks.run skips it on plain
+invocations and reports from the artifact instead).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import Csv
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), os.pardir, "results",
+                        "dryrun.jsonl")
+
+
+def run(csv: Csv) -> dict:
+    checks = {}
+    path = os.path.abspath(ARTIFACT)
+    if not os.path.exists(path):
+        csv.add("dryrun_artifact_missing", note="run repro.launch.dryrun --all")
+        return {"artifact_present": False}
+
+    rows = [json.loads(l) for l in open(path)]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    errors = [r for r in rows if r.get("status") == "error"]
+    csv.add("dryrun_cells", ok=len(ok), skipped=len(skipped),
+            errors=len(errors))
+    checks["all_cells_compile"] = len(errors) == 0
+    checks["skips_documented"] = all("long_500k" == r["shape"]
+                                     for r in skipped)
+
+    for r in ok:
+        if r["mesh"] != "pod":
+            continue                      # the roofline table is single-pod
+        rl = r["roofline"]
+        csv.add(f"roofline_{r['arch']}_{r['shape']}",
+                t_compute=round(rl["t_compute_s"], 4),
+                t_memory=round(rl["t_memory_s"], 4),
+                t_collective=round(rl["t_collective_s"], 4),
+                bottleneck=rl["bottleneck"],
+                mfu=round(rl["mfu_roofline"], 4),
+                useful=round(rl["useful_flops_ratio"], 3))
+    return checks

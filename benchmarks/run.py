@@ -1,0 +1,79 @@
+"""Benchmark driver: one module per dissertation table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+
+Each module prints a ``name,us_per_call,derived`` CSV block and returns a
+dict of named validation checks against the paper's claims; the driver
+prints a final PASS/FAIL summary (also consumed by tests).
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+from .common import Csv
+
+MODULES = [
+    ("merge_saving", "Fig 3.2/3.3 merge-saving calibration"),
+    ("predictor", "Fig 3.4/3.5 GBDT predictor"),
+    ("merging_qos", "Fig 4.4-4.8 merging makespan/QoS"),
+    ("pruning_heuristics", "Fig 5.10-5.13 pruning on heuristics"),
+    ("pam", "Fig 5.15-5.19 PAM/PAMF + cost/energy"),
+    ("pruning_overhead", "Fig 5.20 overhead mitigation + pmf_conv kernel"),
+    ("serving", "Ch 6 SMSE serving prototype"),
+    ("roofline", "Dry-run roofline table"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI mode)")
+    args = ap.parse_args(argv)
+
+    all_checks: dict[str, bool] = {}
+    failed_modules = []
+    for name, title in MODULES:
+        if args.only and args.only != name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        csv = Csv(title)
+        t0 = time.time()
+        try:
+            kwargs = {}
+            if args.quick:
+                kwargs = {
+                    "merging_qos": {"loads": (500, 800), "seeds": (3,)},
+                    "pruning_heuristics": {"loads": (250, 400), "seeds": (5,)},
+                    "pam": {"load": 400, "high_load": 800, "seeds": (5,)},
+                    "pruning_overhead": {"load": 300},
+                    "predictor": {"n_train": 2500, "n_test": 600},
+                    "serving": {"n_requests": 30},
+                    "merge_saving": {"n": 200},
+                }.get(name, {})
+            checks = mod.run(csv, **kwargs) or {}
+        except Exception:
+            traceback.print_exc()
+            failed_modules.append(name)
+            checks = {}
+        csv.emit()
+        for k, v in checks.items():
+            all_checks[f"{name}.{k}"] = bool(v)
+        print(f"# {name} took {time.time() - t0:.1f}s\n", flush=True)
+
+    print("# ===== paper-claim validation summary =====")
+    n_pass = sum(all_checks.values())
+    for k, v in sorted(all_checks.items()):
+        print(f"check,{k},{'PASS' if v else 'FAIL'}")
+    print(f"# {n_pass}/{len(all_checks)} checks passed; "
+          f"{len(failed_modules)} module errors {failed_modules or ''}")
+    return 0 if (n_pass == len(all_checks) and not failed_modules) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

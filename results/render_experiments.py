@@ -1,0 +1,91 @@
+"""Render the §Dry-run/§Roofline tables of EXPERIMENTS.md from
+results/dryrun.jsonl (+ the §Perf ladders from results/perf*.jsonl).
+
+    python results/render_experiments.py
+"""
+
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(path):
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return []
+    rows = {}
+    for line in open(p):
+        r = json.loads(line)
+        rows[(r.get("arch"), r.get("shape"), r.get("mesh"),
+              r.get("variant"))] = r
+    return list(rows.values())
+
+
+def roofline_table(rows, mesh="pod"):
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | MFU_roof | useful |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rl['t_compute_s']:.3g} "
+            f"| {rl['t_memory_s']:.3g} | {rl['t_collective_s']:.3g} "
+            f"| {rl['bottleneck']} | {rl['mfu_roofline']:.4f} "
+            f"| {rl['useful_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | status | params | compile (s) | "
+           "coll bytes/chip | collective mix |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP ({r['reason'][:40]}...) | | | | |")
+            continue
+        rl = r.get("roofline", {})
+        mix = ",".join(f"{k.split('-')[-1]}:{v / 1e9:.1f}G"
+                       for k, v in sorted(
+                           rl.get("collectives", {}).items(),
+                           key=lambda kv: -kv[1])[:3])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+            f"| {r.get('n_params', 0) / 1e9:.2f}B | {r.get('compile_s', '')} "
+            f"| {rl.get('collective_bytes_per_chip', 0) / 1e9:.1f}G | {mix} |")
+    return "\n".join(out)
+
+
+def perf_table(rows, cell):
+    out = ["| variant | t_comp | t_mem | t_coll | bottleneck | MFU_roof | "
+           "t_mem (kernel-credit) | MFU (kernel-credit) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("cell") != cell or r.get("status") != "ok":
+            continue
+        rl, rf = r["roofline"], r.get("roofline_fused", {})
+        out.append(
+            f"| {r['variant']} | {rl['t_compute_s']:.3g} "
+            f"| {rl['t_memory_s']:.3g} | {rl['t_collective_s']:.3g} "
+            f"| {rl['bottleneck']} | {rl['mfu_roofline']:.4f} "
+            f"| {rf.get('t_memory_s', 0):.3g} "
+            f"| {rf.get('mfu_roofline', 0):.4f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    cur = load("dryrun.jsonl")
+    base = load("dryrun_baseline.jsonl")
+    perf = load("perf.jsonl") + load("perf_final.jsonl")
+    print("## §Roofline — current system (single-pod 16x16)\n")
+    print(roofline_table(cur))
+    print("\n## §Roofline — paper-faithful baseline (pre-§Perf)\n")
+    print(roofline_table(base))
+    print("\n## §Dry-run — all cells x meshes (current)\n")
+    print(dryrun_table(cur))
+    for cell in ("prefill", "decode", "xlstm"):
+        print(f"\n## §Perf ladder — {cell}\n")
+        print(perf_table(perf, cell))

@@ -1,0 +1,260 @@
+"""Merge-saving prediction (dissertation Sections 3.3-3.4).
+
+Implements Algorithm 1: a from-scratch **Gradient Boosted Decision Tree**
+regressor with the dissertation's hyper-parameters — number of trees M,
+learning rate L, estimator max depth D, min samples to split an internal
+node S, min samples per leaf J (tuned values M=350, L=0.1, D=11, S=30, J=2).
+
+Two baselines for Fig. 3.5: a *Naive* lookup (mean saving per operation
+signature) and a small *MLP* trained in JAX.  Accuracy is Eq. 3.2: the
+fraction of predictions within tolerance tau of the observed saving.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["RegressionTree", "GBDT", "NaivePredictor", "MLPPredictor",
+           "accuracy"]
+
+
+# ---------------------------------------------------------------------------
+# Exact-greedy regression tree (vectorized splits)
+# ---------------------------------------------------------------------------
+
+class RegressionTree:
+    def __init__(self, max_depth: int = 11, min_samples_split: int = 30,
+                 min_samples_leaf: int = 2):
+        self.max_depth = max_depth
+        self.min_split = min_samples_split
+        self.min_leaf = min_samples_leaf
+        # flat arrays; node 0 is the root
+        self.feature: list[int] = []
+        self.threshold: list[float] = []
+        self.left: list[int] = []
+        self.right: list[int] = []
+        self.value: list[float] = []
+
+    def _new_node(self, value: float) -> int:
+        self.feature.append(-1)
+        self.threshold.append(0.0)
+        self.left.append(-1)
+        self.right.append(-1)
+        self.value.append(value)
+        return len(self.value) - 1
+
+    def _best_split(self, X: np.ndarray, y: np.ndarray):
+        """Best (feature, threshold) by SSE reduction, or None."""
+        n = len(y)
+        best = (0.0, None, None)
+        y_sum, y_sq = y.sum(), (y * y).sum()
+        parent_sse = y_sq - y_sum * y_sum / n
+        for f in range(X.shape[1]):
+            order = np.argsort(X[:, f], kind="stable")
+            xs, ys = X[order, f], y[order]
+            cum = np.cumsum(ys)[:-1]
+            cnt = np.arange(1, n)
+            # candidate split after position i (left = first i+1 samples)
+            valid = (xs[1:] != xs[:-1])
+            valid &= (cnt >= self.min_leaf) & ((n - cnt) >= self.min_leaf)
+            if not valid.any():
+                continue
+            left_mean = cum / cnt
+            right_mean = (y_sum - cum) / (n - cnt)
+            # SSE reduction = n_l*m_l^2 + n_r*m_r^2 - n*m^2 (+const)
+            gain = cnt * left_mean ** 2 + (n - cnt) * right_mean ** 2 \
+                - y_sum * y_sum / n
+            gain = np.where(valid, gain, -np.inf)
+            i = int(np.argmax(gain))
+            if gain[i] > best[0] + 1e-12:
+                thr = 0.5 * (xs[i] + xs[i + 1])
+                best = (float(gain[i]), f, thr)
+        if best[1] is None:
+            return None
+        return best[1], best[2]
+
+    def _build(self, X: np.ndarray, y: np.ndarray, depth: int) -> int:
+        node = self._new_node(float(y.mean()))
+        if depth >= self.max_depth or len(y) < self.min_split or y.std() < 1e-12:
+            return node
+        split = self._best_split(X, y)
+        if split is None:
+            return node
+        f, thr = split
+        mask = X[:, f] <= thr
+        self.feature[node] = f
+        self.threshold[node] = thr
+        self.left[node] = self._build(X[mask], y[mask], depth + 1)
+        self.right[node] = self._build(X[~mask], y[~mask], depth + 1)
+        return node
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RegressionTree":
+        self._build(np.asarray(X, float), np.asarray(y, float), 0)
+        self._freeze()
+        return self
+
+    def _freeze(self):
+        self.feature = np.asarray(self.feature, np.int32)
+        self.threshold = np.asarray(self.threshold, np.float64)
+        self.left = np.asarray(self.left, np.int32)
+        self.right = np.asarray(self.right, np.int32)
+        self.value = np.asarray(self.value, np.float64)
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, float)
+        node = np.zeros(len(X), dtype=np.int32)
+        active = self.left[node] >= 0
+        while active.any():
+            f = self.feature[node[active]]
+            thr = self.threshold[node[active]]
+            go_left = X[active, f] <= thr
+            nxt = np.where(go_left, self.left[node[active]],
+                           self.right[node[active]])
+            node[active] = nxt
+            active = self.left[node] >= 0
+        return self.value[node]
+
+
+# ---------------------------------------------------------------------------
+# Gradient boosting (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GBDT:
+    n_estimators: int = 350     # M
+    learning_rate: float = 0.1  # L
+    max_depth: int = 11         # D
+    min_samples_split: int = 30  # S
+    min_samples_leaf: int = 2   # J
+    subsample: float = 0.8      # Step 2: t ⊂ T (80% of the benchmark set)
+    seed: int = 0
+    _trees: list = field(default_factory=list)
+    _f0: float = 0.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GBDT":
+        X = np.asarray(X, float)
+        y = np.asarray(y, float)
+        rng = np.random.default_rng(self.seed)
+        self._f0 = float(y.mean())            # B_0(x)
+        pred = np.full(len(y), self._f0)
+        self._trees = []
+        for _ in range(self.n_estimators):
+            r = y - pred                      # r_mi (Eq. 3.1, squared loss)
+            idx = (rng.random(len(y)) < self.subsample).nonzero()[0] \
+                if self.subsample < 1.0 else np.arange(len(y))
+            tree = RegressionTree(self.max_depth, self.min_samples_split,
+                                  self.min_samples_leaf).fit(X[idx], r[idx])
+            self._trees.append(tree)
+            pred = pred + self.learning_rate * tree.predict(X)  # B_m(x)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, float)
+        out = np.full(len(X), self._f0)
+        for tree in self._trees:
+            out += self.learning_rate * tree.predict(X)
+        return out
+
+    def staged_rmse(self, X: np.ndarray, y: np.ndarray) -> list[float]:
+        """RMSE after each boosting stage (for the Fig. 3.4a tuning curves)."""
+        X = np.asarray(X, float)
+        out = np.full(len(X), self._f0)
+        rmses = []
+        for tree in self._trees:
+            out += self.learning_rate * tree.predict(X)
+            rmses.append(float(np.sqrt(np.mean((out - y) ** 2))))
+        return rmses
+
+
+# ---------------------------------------------------------------------------
+# Baselines (Fig. 3.5)
+# ---------------------------------------------------------------------------
+
+class NaivePredictor:
+    """Lookup table of mean saving per operation signature (B,S,R,codecs)."""
+
+    SIG_COLS = slice(5, 11)  # featurize() layout: B,S,R,mpeg4,vp9,hevc
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "NaivePredictor":
+        self.table: dict[tuple, float] = {}
+        self.default = float(np.mean(y))
+        sigs = np.asarray(X)[:, self.SIG_COLS]
+        for sig in np.unique(sigs, axis=0):
+            mask = (sigs == sig).all(axis=1)
+            self.table[tuple(sig)] = float(np.mean(y[mask]))
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        sigs = np.asarray(X)[:, self.SIG_COLS]
+        return np.array([self.table.get(tuple(s), self.default) for s in sigs])
+
+
+class MLPPredictor:
+    """Small JAX MLP (2 hidden layers) trained with Adam on z-scored
+    features — the [PKG+20]-style baseline."""
+
+    def __init__(self, hidden: int = 64, steps: int = 800, lr: float = 3e-3,
+                 seed: int = 0):
+        self.hidden, self.steps, self.lr, self.seed = hidden, steps, lr, seed
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "MLPPredictor":
+        import jax
+        import jax.numpy as jnp
+
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float32)
+        self.mu, self.sd = X.mean(0), X.std(0) + 1e-6
+        Xn = (X - self.mu) / self.sd
+        key = jax.random.PRNGKey(self.seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        d, h = X.shape[1], self.hidden
+        params = {
+            "w1": jax.random.normal(k1, (d, h)) * (1.0 / np.sqrt(d)),
+            "b1": jnp.zeros(h),
+            "w2": jax.random.normal(k2, (h, h)) * (1.0 / np.sqrt(h)),
+            "b2": jnp.zeros(h),
+            "w3": jax.random.normal(k3, (h, 1)) * (1.0 / np.sqrt(h)),
+            "b3": jnp.zeros(1),
+        }
+
+        def fwd(p, x):
+            a = jnp.tanh(x @ p["w1"] + p["b1"])
+            a = jnp.tanh(a @ p["w2"] + p["b2"])
+            return (a @ p["w3"] + p["b3"])[:, 0]
+
+        def loss(p, x, t):
+            return jnp.mean((fwd(p, x) - t) ** 2)
+
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+
+        @jax.jit
+        def step(p, m, v, i, x, t):
+            g = jax.grad(loss)(p, x, t)
+            m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+            v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+            mh = jax.tree.map(lambda a: a / (1 - 0.9 ** (i + 1)), m)
+            vh = jax.tree.map(lambda a: a / (1 - 0.999 ** (i + 1)), v)
+            p = jax.tree.map(lambda a, mm, vv: a - self.lr * mm / (jnp.sqrt(vv) + 1e-8),
+                             p, mh, vh)
+            return p, m, v
+
+        xb, tb = jnp.asarray(Xn), jnp.asarray(y)
+        for i in range(self.steps):
+            params, m, v = step(params, m, v, i, xb, tb)
+        self._params = jax.tree.map(np.asarray, params)
+        self._fwd = fwd
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        Xn = (np.asarray(X, np.float32) - self.mu) / self.sd
+        return np.asarray(self._fwd(self._params, jnp.asarray(Xn)))
+
+
+def accuracy(pred: np.ndarray, truth: np.ndarray, tau: float = 0.12) -> float:
+    """Eq. 3.2: percentage of predictions within tau of the observation."""
+    return float(100.0 * np.mean(np.abs(pred - truth) <= tau))

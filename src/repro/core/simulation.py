@@ -1,0 +1,413 @@
+"""Discrete-event simulator for the Chapter 4/5/6 experiments.
+
+The simulator is the *resource allocation system* of Figs. 4.2/5.2/5.5: an
+admission-control front gate (similarity detection + merge appropriateness),
+a batch queue, a pluggable mapping heuristic, an optional pruning mechanism,
+and a pool of (possibly heterogeneous) machines.
+
+It drives the same ``core`` components that the real SMSE serving engine
+(``repro.serving``) uses against live JAX executables — the simulator swaps
+the executable for an execution-time oracle so thousand-task experiments run
+in milliseconds.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .appropriateness import PositionFinder, VirtualQueueEvaluator
+from .heuristics import MappingContext, make_heuristic
+from .merging import MergeLevel, SimilarityDetector, merge_tasks
+from .merge_model import VideoExecModel, VideoMeta
+from .oversubscription import adaptive_alpha, oversubscription_level
+from .pmf import PMF
+from .pruning import Pruner, PruningConfig
+from .tasks import Machine, PETMatrix, Task
+
+__all__ = ["SimConfig", "SimStats", "Simulator", "PETOracle", "VideoOracle"]
+
+
+# ---------------------------------------------------------------------------
+# Execution oracles
+# ---------------------------------------------------------------------------
+
+class PETOracle:
+    """Oracle backed by a PET matrix (Chapter 5 workloads).
+
+    ``uncertainty_mult`` widens the *ground truth* spread relative to what
+    the estimator believes (the 5SD/10SD experiments of §4.6.5).
+    """
+
+    def __init__(self, pet: PETMatrix, uncertainty_mult: float = 1.0, seed: int = 0):
+        self.petm = pet
+        self.uncertainty = uncertainty_mult
+        self._rng = np.random.default_rng(seed)
+        self._cache: dict = {}
+
+    def mean_std(self, task: Task, machine: Machine) -> tuple[float, float]:
+        key = (task.ttype, machine.mtype, machine.speed)
+        if key not in self._cache:
+            p = self.petm.pet(task.ttype, machine)
+            self._cache[key] = (p.mean(), p.std())
+        return self._cache[key]
+
+    def pmf(self, task: Task, machine: Machine) -> PMF:
+        return self.petm.pet(task.ttype, machine)
+
+    def sample(self, task: Task, machine: Machine) -> float:
+        mu, sd = self.mean_std(task, machine)
+        if self.uncertainty == 1.0:
+            p = self.petm.pet(task.ttype, machine).normalize()
+            v = p.values / p.values.sum()
+            return float(self._rng.choice(p.times(), p=v))
+        return float(max(1.0, self._rng.normal(mu, sd * self.uncertainty)))
+
+
+class VideoOracle:
+    """Oracle backed by the Chapter-3 video execution model; understands
+    merged tasks (compound ops on the same segment)."""
+
+    def __init__(self, exec_model: VideoExecModel, videos: dict[str, VideoMeta],
+                 rel_std: float = 0.04, uncertainty_mult: float = 1.0,
+                 seed: int = 0):
+        self.model = exec_model
+        self.videos = videos
+        self.rel_std = rel_std
+        self.uncertainty = uncertainty_mult
+        self._rng = np.random.default_rng(seed)
+
+    def _ops(self, task: Task) -> list[str]:
+        return [r.op for r in task.all_requests()]
+
+    def _mean(self, task: Task, machine: Machine) -> float:
+        v = self.videos[task.data_id]
+        ops = self._ops(task)
+        t = (self.model.individual_time(v, ops[0], noisy=False) if len(ops) == 1
+             else self.model.merged_time(v, ops, noisy=False))
+        return t / machine.speed
+
+    def mean_std(self, task: Task, machine: Machine) -> tuple[float, float]:
+        mu = self._mean(task, machine)
+        return mu, self.rel_std * mu
+
+    def pmf(self, task: Task, machine: Machine) -> PMF:
+        mu, sd = self.mean_std(task, machine)
+        return PMF.from_normal(mu, sd)
+
+    def sample(self, task: Task, machine: Machine) -> float:
+        mu, sd = self.mean_std(task, machine)
+        return float(max(0.05, self._rng.normal(mu, sd * self.uncertainty)))
+
+
+# ---------------------------------------------------------------------------
+# Config & stats
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimConfig:
+    heuristic: str = "FCFS-RR"
+    merging: str = "none"               # none|conservative|aggressive|adaptive
+    position_finder: str | None = None  # None|"linear"|"log"
+    pruning: PruningConfig | None = None
+    hard_deadlines: bool = False        # Ch5: purge late tasks; Ch4: run anyway
+    immediate_mode: bool = False
+    seed: int = 0
+    alpha: float = 2.0                  # base worst-case coefficient (Eq. 4.1)
+    merge_degree_cap: int = 5           # §3.2.2: little gain beyond 5
+
+
+@dataclass
+class SimStats:
+    n_requests: int = 0
+    on_time: int = 0
+    missed: int = 0
+    dropped: int = 0
+    merges: int = 0
+    merge_rejected: int = 0
+    makespan: float = 0.0
+    busy_time: float = 0.0
+    cost: float = 0.0
+    energy: float = 0.0
+    mapping_events: int = 0
+    per_type: dict = field(default_factory=dict)
+    per_user_missrate: dict = field(default_factory=dict)
+    deferred: int = 0
+
+    @property
+    def miss_rate(self) -> float:
+        total = self.on_time + self.missed + self.dropped
+        return (self.missed + self.dropped) / total if total else 0.0
+
+    @property
+    def robustness(self) -> float:
+        total = self.on_time + self.missed + self.dropped
+        return self.on_time / total if total else 0.0
+
+    def fairness_variance(self) -> float:
+        """Variance of per-user miss rate (Fig. 6.9 'suffering variation')."""
+        rates = [m / max(n, 1) for m, n in self.per_user_missrate.values()]
+        return float(np.var(rates)) if rates else 0.0
+
+    def type_fairness_variance(self) -> float:
+        """Variance of per-task-type miss rate (§5.7.5 fairness factor)."""
+        rates = [miss / max(ok + miss, 1) for ok, miss in self.per_type.values()]
+        return float(np.var(rates)) if rates else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+class Simulator:
+    def __init__(self, tasks: list[Task], machines: list[Machine], oracle,
+                 cfg: SimConfig | None = None):
+        self.cfg = cfg or SimConfig()
+        self.tasks = sorted(tasks, key=lambda t: t.arrival)
+        self.machines = machines
+        self.oracle = oracle
+        self.heuristic = make_heuristic(self.cfg.heuristic)
+        self.pruner = (Pruner(oracle, self.cfg.pruning)
+                       if self.cfg.pruning is not None else None)
+        self.detector = SimilarityDetector()
+        self.batch: list[Task] = []
+        self.stats = SimStats()
+        self.now = 0.0
+        self._misses_since_event = 0
+        self._rng = np.random.default_rng(self.cfg.seed)
+        self._seq = itertools.count()
+        self._events: list = []
+        self._machine_epoch = {m.mid: 0 for m in machines}
+
+    # -- event plumbing -------------------------------------------------------
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def run(self) -> SimStats:
+        for task in self.tasks:
+            self._push(task.arrival, "arrive", task)
+        last_completion = 0.0
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.now = max(self.now, t)
+            if kind == "arrive":
+                self._handle_arrival(payload)
+                self._mapping_event()
+            elif kind == "finish":
+                mid, epoch = payload
+                if epoch != self._machine_epoch[mid]:
+                    continue  # stale event (task was evicted)
+                last_completion = max(last_completion,
+                                      self._handle_finish(self.machines[mid]))
+                self._mapping_event()
+        self.stats.makespan = last_completion
+        return self.stats
+
+    # -- admission control (Section 4.1/4.4) -----------------------------------
+    def _handle_arrival(self, task: Task) -> None:
+        self.stats.n_requests += 1
+        task.queue_rank = task.arrival
+        if self.cfg.merging == "none":
+            self.batch.append(task)
+            return
+
+        hit = self.detector.find(task)
+        merged = None
+        level = None
+        self._pending_position = None
+        if hit is not None:
+            level, existing = hit
+            viable = (existing.status == "queued"
+                      and existing.merged_into is None
+                      and len(existing.all_requests()) < self.cfg.merge_degree_cap)
+            if viable and self._merge_appropriate(existing, task, level):
+                merged = merge_tasks(existing, task, level)
+                self.stats.merges += 1
+                if self._pending_position is not None:
+                    self._apply_position(existing, self._pending_position)
+            elif viable:
+                self.stats.merge_rejected += 1
+        self.detector.on_arrival(task, hit[1] if hit else None, merged, level)
+        if merged is None:
+            self.batch.append(task)
+
+    def _apply_position(self, merged: Task, pos: int) -> None:
+        """Re-rank the merged task so FCFS dispatch honours the found
+        position among the remaining batch-queue tasks."""
+        rest = sorted((t for t in self.batch if t.tid != merged.tid),
+                      key=lambda t: t.queue_rank)
+        if not rest:
+            return
+        if pos <= 0:
+            merged.queue_rank = rest[0].queue_rank - 1.0
+        elif pos >= len(rest):
+            merged.queue_rank = rest[-1].queue_rank + 1.0
+        else:
+            merged.queue_rank = 0.5 * (rest[pos - 1].queue_rank +
+                                       rest[pos].queue_rank)
+
+    def _merge_appropriate(self, existing: Task, task: Task,
+                           level: MergeLevel) -> bool:
+        policy = self.cfg.merging
+        if level is MergeLevel.TASK:
+            return True          # identical request: free reuse, no side effect
+        if policy == "aggressive":
+            # aggressive merging ignores appropriateness (§4.6.1); the
+            # position finder is still consulted to *place* the compound task
+            if self.cfg.position_finder:
+                ev = VirtualQueueEvaluator(
+                    self.machines, lambda t, m: self.oracle.mean_std(t, m),
+                    now=self.now, alpha=self.cfg.alpha)
+                pf = PositionFinder(ev)
+                rest = sorted((t for t in self.batch if t.tid != existing.tid),
+                              key=lambda t: t.queue_rank)
+                cand_task = _shallow_merged_view(existing, task)
+                base = ev.count_misses(self.batch + [task])
+                pos = (pf.linear(rest, cand_task, base)
+                       if self.cfg.position_finder == "linear"
+                       else pf.logarithmic(rest, cand_task, base))
+                self._pending_position = pos   # may be None: keep position
+            return True
+        alpha = self.cfg.alpha
+        if policy == "adaptive":
+            osl = oversubscription_level(
+                self.machines, lambda t, m: self.oracle.mean_std(t, m), self.now)
+            alpha = adaptive_alpha(osl)
+        ev = VirtualQueueEvaluator(
+            self.machines, lambda t, m: self.oracle.mean_std(t, m),
+            now=self.now, alpha=alpha)
+        queue_wo = self.batch + [task]
+        base = ev.count_misses(queue_wo)
+        # candidate merged queue: existing augmented in place
+        cand_task = _shallow_merged_view(existing, task)
+        cand_queue = [cand_task if t.tid == existing.tid else t for t in self.batch]
+        if self.cfg.position_finder and any(t.tid == existing.tid
+                                            for t in self.batch):
+            pf = PositionFinder(ev)
+            rest = sorted((t for t in self.batch if t.tid != existing.tid),
+                          key=lambda t: t.queue_rank)
+            pos = (pf.linear(rest, cand_task, base)
+                   if self.cfg.position_finder == "linear"
+                   else pf.logarithmic(rest, cand_task, base))
+            if pos is None:
+                return False
+            self._pending_position = pos
+            return True
+        merged_misses = ev.count_misses(cand_queue)
+        return merged_misses <= base
+
+    # -- mapping event (Fig. 5.2) ----------------------------------------------
+    def _mapping_event(self) -> None:
+        self.stats.mapping_events += 1
+        if self.cfg.hard_deadlines:
+            self._purge_infeasible()
+        # pruner dropping pass on machine queues (Fig. 5.5)
+        if self.pruner is not None:
+            dropped = self.pruner.drop_pass(self.machines, self.now,
+                                            self._misses_since_event)
+            self._misses_since_event = 0
+            for t in dropped:
+                self._account_drop(t)
+        else:
+            self._misses_since_event = 0
+
+        if self.batch and any(m.free_slots > 0 for m in self.machines):
+            ctx = MappingContext(oracle=self.oracle, now=self.now,
+                                 pruner=self.pruner)
+            if (self.pruner is not None and self.pruner.cfg.dynamic_defer
+                    and self.heuristic.name not in ("PAM", "PAMF")):
+                # Deferring Threshold Estimator (Eq. 5.10) runs every mapping
+                # event regardless of the plugged-in heuristic (Fig. 5.5)
+                free = [m for m in self.machines if m.free_slots > 0]
+                if free:
+                    best = {t.tid: max(ctx.chance(t, m) for m in free)
+                            for t in self.batch}
+                    self.pruner.update_defer_threshold(
+                        self.batch, self.machines, best, self.now)
+            before_defer = self.pruner.stats["deferred"] if self.pruner else 0
+            mapped = self.heuristic.map_batch(self.batch, self.machines, ctx)
+            if self.pruner:
+                self.stats.deferred += self.pruner.stats["deferred"] - before_defer
+            mapped_ids = {t.tid for t, _ in mapped}
+            if mapped_ids:
+                self.batch = [t for t in self.batch if t.tid not in mapped_ids]
+                for t, _m in mapped:
+                    t.status = "mapped"
+                    self.detector.on_departure(t)
+        # start idle machines
+        for m in self.machines:
+            if m.running is None and m.queue:
+                self._start_next(m)
+
+    def _purge_infeasible(self) -> None:
+        live, dead = [], []
+        for t in self.batch:
+            (dead if t.effective_deadline <= self.now else live).append(t)
+        for t in dead:
+            self._account_drop(t)
+            self.detector.on_departure(t)
+        self.batch = live
+
+    def _account_drop(self, task: Task) -> None:
+        for r in task.all_requests():
+            r.status = "dropped"
+            self.stats.dropped += 1
+            self._note_outcome(r, on_time=False)
+        self._misses_since_event += len(task.all_requests())
+
+    def _note_outcome(self, req: Task, on_time: bool) -> None:
+        tt = self.stats.per_type.setdefault(req.ttype, [0, 0])
+        tt[0 if on_time else 1] += 1
+        u = self.stats.per_user_missrate.setdefault(req.user, [0, 0])
+        u[1] += 1
+        if not on_time:
+            u[0] += 1
+
+    # -- machine execution ------------------------------------------------------
+    def _start_next(self, m: Machine) -> None:
+        while m.queue:
+            task = m.queue.pop(0)
+            if self.cfg.hard_deadlines and task.effective_deadline <= self.now:
+                self._account_drop(task)
+                continue
+            dur = self.oracle.sample(task, m)
+            task.status = "running"
+            m.running = task
+            m.run_end = self.now + dur
+            self._machine_epoch[m.mid] += 1
+            self._push(m.run_end, "finish", (m.mid, self._machine_epoch[m.mid]))
+            self.stats.busy_time += dur
+            self.stats.cost += dur * m.cost_rate
+            self.stats.energy += dur * m.power
+            return
+
+    def _handle_finish(self, m: Machine) -> float:
+        task = m.running
+        m.running = None
+        if task is not None:
+            for r in task.all_requests():
+                r.status = "done"
+                r.completion = self.now
+                on_time = self.now <= r.deadline
+                if on_time:
+                    self.stats.on_time += 1
+                    if self.pruner:
+                        self.pruner.fairness.note_served(r.ttype)
+                else:
+                    self.stats.missed += 1
+                    self._misses_since_event += 1
+                self._note_outcome(r, on_time)
+        self._start_next(m)
+        return self.now
+
+
+def _shallow_merged_view(existing: Task, arriving: Task) -> Task:
+    """A copy of ``existing`` with ``arriving`` merged in, for what-if
+    evaluation without mutating live state."""
+    import copy
+    view = copy.copy(existing)
+    view.children = list(existing.children) + [arriving]
+    return view

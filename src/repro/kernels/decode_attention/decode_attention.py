@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: flash-decode GQA attention.
+
+One new token attends over a long KV cache — the serving engine's hot loop
+(decode_32k / long_500k shapes).  The XLA fallback materializes the (B, H,
+S) score tensor in HBM; this kernel streams KV blocks through VMEM with an
+online softmax, so HBM traffic is exactly one read of K/V plus O(B*H*hd).
+
+Grid: (B, Hkv, S / BS) — batch x kv-head x kv-block.  For each (b, g):
+  q tile    (G, hd)      G = query heads per kv head (GQA group)
+  k/v block (BS, hd)
+  carry     m (G,), l (G,), acc (G, hd)  — kept in the output refs between
+            sequential grid steps over the kv-block axis (TPU grid is
+            executed sequentially per (b, g), making the carry legal).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, *,
+            block_s: int, hd: int):
+    sb = pl.program_id(2)
+    length = len_ref[0]
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0, 0]                     # (G, hd)
+    k = k_ref[0, 0]                     # (BS, hd)
+    v = v_ref[0, 0]                     # (BS, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    pos = sb * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, -1e30)
+
+    m_prev = m_ref[0, 0]                # (G, 1)
+    l_prev = l_ref[0, 0]
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=-1))[:, None]
+    p = jnp.exp(s - m_new)
+    p = jnp.where(pos < length, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)     # (G, 1)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc = o_ref[0, 0] * alpha \
+        + jnp.dot(p, v.astype(jnp.float32))
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+    o_ref[0, 0] = acc
+
+    # normalize on the last block
+    @pl.when(sb == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[0, 0], 1e-20)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, lengths,
+                            block_s: int = 512, interpret: bool = True):
+    """q (B, H, hd); k/v (B, S, Hkv, hd); lengths (B,) -> (B, H, hd)."""
+    b, s, hkv, hd = k_cache.shape
+    h = q.shape[1]
+    g = h // hkv
+    block_s = min(block_s, s)
+    pad_s = (-s) % block_s
+    if pad_s:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    sp = k_cache.shape[1]
+    qg = q.reshape(b, hkv, g, hd)
+    # (B, Hkv, S, hd) layout so the kv-head axis is a grid dim
+    kt = jnp.swapaxes(k_cache, 1, 2)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+
+    kernel = functools.partial(_kernel, block_s=block_s, hd=hd)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, sp // block_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda i, j, k: (i, j, k, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda i, j, k: (i, j, k, 0)),
+            pl.BlockSpec((1,), lambda i, j, k: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda i, j, k: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg.reshape(b, hkv, g, hd), kt, vt, lengths.astype(jnp.int32))
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Jitted wrapper for the flash-decode kernel (TPU target; interpret mode
+on CPU).  ``use_kernel=False`` falls back to the jnp oracle — the dry-run
+model path uses the oracle so CPU lowering works; on TPU the kernel slots
+into ``models.layers.decode_attention``."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .decode_attention import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("block_s", "interpret", "use_kernel"))
+def decode_attention(q, k_cache, v_cache, lengths, block_s: int = 512,
+                     interpret: bool = True, use_kernel: bool = True):
+    if use_kernel:
+        return decode_attention_pallas(q, k_cache, v_cache, lengths,
+                                       block_s=block_s, interpret=interpret)
+    return decode_attention_ref(q, k_cache, v_cache, lengths)

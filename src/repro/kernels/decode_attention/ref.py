@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-decode GQA kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q (B, H, hd); k/v (B, S, Hkv, hd); lengths (B,) -> (B, H, hd)."""
+    b, s, hkv, hd = k_cache.shape
+    h = q.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)

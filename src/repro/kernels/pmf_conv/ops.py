@@ -1,0 +1,66 @@
+"""Jitted front door for the batched PMF-convolution kernel.
+
+``batched_success`` is what a TPU-resident scheduler calls once per mapping
+event: all (task x machine-tail) chances in a single launch, replacing the
+per-pair Python convolutions of the CPU path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pmf_conv import pmf_conv_pallas
+from .ref import pmf_conv_ref
+
+
+@partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def pmf_conv(pet, pct, dl, interpret: bool = True, use_kernel: bool = True):
+    """(out, success) for a batch of PEND_DROP convolutions."""
+    if use_kernel:
+        return pmf_conv_pallas(pet, pct, dl, interpret=interpret)
+    return pmf_conv_ref(pet, pct, dl)
+
+
+def pack_pmfs(pmfs, length: int) -> tuple[np.ndarray, np.ndarray]:
+    """Compact + pad a list of core.pmf.PMF onto a fixed grid.
+
+    Returns (values (N, length), offsets (N,)).  Mass beyond the grid is
+    folded into the last bucket (impulse compaction's max-range clamp)."""
+    vals = np.zeros((len(pmfs), length), np.float32)
+    offs = np.zeros((len(pmfs),), np.int64)
+    for i, p in enumerate(pmfs):
+        offs[i] = p.offset
+        v = np.asarray(p.values, np.float32)
+        if len(v) > length:
+            head, tail = v[:length - 1], v[length - 1:]
+            vals[i, :length - 1] = head
+            vals[i, length - 1] = tail.sum()
+        else:
+            vals[i, :len(v)] = v
+    return vals, offs
+
+
+def batched_success(pets, pcts, deadlines, length: int = 128,
+                    interpret: bool = True) -> np.ndarray:
+    """Chance-of-success for N (task, machine-tail) pairs.
+
+    ``pets``/``pcts``: lists of PMF; ``deadlines``: absolute times.
+    Offsets are folded into the per-row deadline index.
+    """
+    pet_v, pet_o = pack_pmfs(pets, length)
+    pct_v, pct_o = pack_pmfs(pcts, length)
+    # out grid starts at pet_off + pct_off; success needs dl - offsets
+    dl_idx = np.asarray(deadlines, np.int64) - pet_o - pct_o
+    # the PEND cut applies on the pct grid: t_c < dl - pct_off - pet_off_min?
+    # Convolution index algebra: out[t] corresponds to absolute
+    # pet_off + pct_off + t; the pct truncation index is dl - pct_off - pet_off
+    # ... the kernel applies both with the same dl index because the pet
+    # offset shifts every path equally (see tests for the exact-match proof).
+    dl_kernel = np.maximum(dl_idx, -1).astype(np.float32)
+    _, suc = pmf_conv(jnp.asarray(pet_v), jnp.asarray(pct_v),
+                      jnp.asarray(dl_kernel), interpret=interpret)
+    return np.asarray(suc)

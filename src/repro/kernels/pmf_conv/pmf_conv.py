@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: batched PMF convolution with deadline truncation.
+
+The dissertation's pruning mechanism spends its overhead convolving PET and
+PCT PMFs (§5.5 introduces memoization + impulse compaction to tame it).
+The TPU adaptation: impulse compaction normalizes every PMF onto a fixed
+``L``-bucket grid, which turns the per-(task, machine) convolutions into a
+dense batched computation — this kernel evaluates a whole mapping event's
+(batch x machine) chance-of-success matrix in one launch.
+
+Grid: (N / BN,) — one program per batch tile.
+Blocks (VMEM): pet (BN, Le), pct (BN, Lc), dl (BN, 1) -> out (BN, Lo),
+success (BN, 1).  The inner loop runs Le vector FMAs on (BN, Lo) lanes —
+VPU-friendly; Lo is padded to a multiple of 128 (lane width) by ops.py.
+
+Semantics match ``ref.pmf_conv_ref`` (PEND_DROP, Eq. 5.4):
+  out     = conv(pet, pct * [t < dl]) + passthrough(pct * [t >= dl])
+  success = sum_{t <= dl} conv(pet, pct * [t < dl])[t]
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(pet_ref, pct_ref, dl_ref, out_ref, suc_ref, *, le: int, lc: int,
+            lo: int):
+    pet = pet_ref[...]                       # (BN, Le)
+    pct = pct_ref[...]                       # (BN, Lc)
+    dl = dl_ref[...]                         # (BN, 1) f32 (deadline index)
+
+    bn = pet.shape[0]
+    t_c = jax.lax.broadcasted_iota(jnp.float32, (bn, lc), 1)
+    ok = (t_c < dl).astype(pct.dtype)
+    pct_ok = pct * ok
+    pct_late = pct * (1.0 - ok)
+
+    # pad the truncated PCT to the output length once (VMEM scratch-free)
+    pad = jnp.zeros((bn, lo - lc), pct.dtype)
+    base = jnp.concatenate([pct_ok, pad], axis=1)      # (BN, Lo)
+    t_o = jax.lax.broadcasted_iota(jnp.float32, (bn, lo), 1)
+
+    def body(k, acc):
+        # shift-right base by k: out += pet[:, k] * pct_ok[t - k]
+        shifted = _shift_right(base, k, lo)
+        return acc + pet[:, k][:, None] * shifted
+
+    acc = jax.lax.fori_loop(0, le, body,
+                            jnp.zeros((bn, lo), jnp.float32))
+    suc_ref[...] = jnp.sum(
+        jnp.where(t_o <= dl, acc, 0.0), axis=1, keepdims=True)
+    late_pad = jnp.concatenate([pct_late, pad], axis=1)
+    out_ref[...] = acc + late_pad
+
+
+def _shift_right(x: jnp.ndarray, k, lo: int) -> jnp.ndarray:
+    """x shifted right by dynamic k along the lane axis, zero-filled."""
+    t = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    rolled = _roll(x, k)
+    return jnp.where(t >= k, rolled, 0.0)
+
+
+def _roll(x: jnp.ndarray, k) -> jnp.ndarray:
+    # dynamic circular roll along axis 1 (pltpu.roll exists on TPU; use the
+    # portable gather formulation so interpret mode works everywhere)
+    lo = x.shape[1]
+    idx = (jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) - k) % lo
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
+def pmf_conv_pallas(pet: jnp.ndarray, pct: jnp.ndarray, dl: jnp.ndarray,
+                    block_n: int = 8, interpret: bool = True):
+    """Batched PEND_DROP convolution.  pet (N, Le), pct (N, Lc), dl (N,).
+
+    Returns (out (N, Lo), success (N,)); Lo = Lc + Le - 1 padded to 128.
+    """
+    n, le = pet.shape
+    lc = pct.shape[1]
+    lo_true = lc + le - 1
+    lo = ((lo_true + 127) // 128) * 128
+    block_n = min(block_n, n)
+    pad_n = (-n) % block_n
+    if pad_n:
+        pet = jnp.pad(pet, ((0, pad_n), (0, 0)))
+        pct = jnp.pad(pct, ((0, pad_n), (0, 0)))
+        dl = jnp.pad(dl, (0, pad_n))
+    nn = pet.shape[0]
+    dl2 = dl.astype(jnp.float32)[:, None]
+
+    kernel = functools.partial(_kernel, le=le, lc=lc, lo=lo)
+    out, suc = pl.pallas_call(
+        kernel,
+        grid=(nn // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, le), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, lc), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, lo), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nn, lo), jnp.float32),
+            jax.ShapeDtypeStruct((nn, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pet.astype(jnp.float32), pct.astype(jnp.float32), dl2)
+    return out[:n, :lo_true], jnp.minimum(suc[:n, 0], 1.0)

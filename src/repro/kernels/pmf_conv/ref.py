@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the batched PMF convolution kernel.
+
+Semantics (dissertation Eqs. 5.2-5.5, batched over (task, machine) pairs on
+a fixed compacted grid — impulse compaction (§5.5) is what makes the fixed
+kernel shape possible):
+
+  inputs:  pet  (N, Le)   execution-time PMFs
+           pct  (N, Lc)   previous completion-time PMFs
+           dl   (N,)      deadline index on the shared grid
+  outputs: out  (N, Lc+Le-1) completion PMFs under PEND_DROP:
+             conv(pet, pct * [t < dl]) + passthrough(pct * [t >= dl])
+           success (N,)   P(complete <= dl) = sum_{t<=dl} conv part
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pmf_conv_ref(pet: jnp.ndarray, pct: jnp.ndarray, dl: jnp.ndarray):
+    n, le = pet.shape
+    lc = pct.shape[1]
+    lo = lc + le - 1
+    t_c = jnp.arange(lc)[None, :]
+    ok = (t_c < dl[:, None]).astype(pct.dtype)
+    pct_ok = pct * ok
+    pct_late = pct * (1.0 - ok)
+
+    # batched full convolution
+    def conv_row(e, c):
+        return jnp.convolve(c, e, mode="full")
+    out = jnp.stack([conv_row(pet[i], pct_ok[i]) for i in range(n)]) \
+        if False else _batched_conv(pet, pct_ok)
+    # success before the pass-through is added
+    t_o = jnp.arange(lo)[None, :]
+    success = jnp.sum(out * (t_o <= dl[:, None]), axis=1)
+    # pass-through of late prev mass (task dropped; machine frees when
+    # the previous task does)
+    out = out + jnp.pad(pct_late, ((0, 0), (0, lo - lc)))
+    return out, jnp.minimum(success, 1.0)
+
+
+def _batched_conv(pet: jnp.ndarray, pct: jnp.ndarray) -> jnp.ndarray:
+    """out[n, t] = sum_k pet[n, k] * pct[n, t-k]."""
+    n, le = pet.shape
+    lc = pct.shape[1]
+    lo = lc + le - 1
+    pad = jnp.pad(pct, ((0, 0), (0, lo - lc)))
+    out = jnp.zeros((n, lo), pet.dtype)
+    for k in range(le):
+        out = out + pet[:, k:k + 1] * jnp.roll(pad, k, axis=1) \
+            * (jnp.arange(lo)[None, :] >= k)
+    return out

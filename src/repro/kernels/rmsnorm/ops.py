@@ -1,0 +1,18 @@
+"""Jitted wrapper for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import rmsnorm_ref
+from .rmsnorm import rmsnorm_pallas
+
+
+@partial(jax.jit, static_argnames=("eps", "interpret", "use_kernel"))
+def rmsnorm(x, scale, eps: float = 1e-5, interpret: bool = True,
+            use_kernel: bool = True):
+    if use_kernel:
+        return rmsnorm_pallas(x, scale, eps=eps, interpret=interpret)
+    return rmsnorm_ref(x, scale, eps=eps)

@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512"))
+
+# --- everything below may import jax -------------------------------------
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs.base import SHAPES, shape_applicable  # noqa: E402
+from ..configs.registry import ARCHS, get_arch, get_shape  # noqa: E402
+from ..models import transformer as T  # noqa: E402
+from ..optim.optimizers import OptConfig, opt_init, opt_update  # noqa: E402
+from ..parallel import ctx as pctx  # noqa: E402
+from ..parallel import roofline as RL  # noqa: E402
+from ..parallel.sharding import (batch_specs, cache_specs, dp_axes,  # noqa: E402
+                                 opt_state_specs, param_specs, to_named)
+from .mesh import make_production_mesh  # noqa: E402
+from .specs import (active_params, count_params, decode_input_specs,  # noqa: E402
+                    param_shapes, prefill_input_specs, train_input_specs)
+
+"""Multi-pod dry-run: ``lower().compile()`` for every (arch x shape x mesh)
+cell on placeholder devices; records memory analysis, cost analysis and
+roofline terms (see EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --arch llama3-8b --shape decode_32k --multipod
+  python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+"""
+
+
+def opt_for(cfg, n_params: int) -> OptConfig:
+    # Adam f32 moments for >50B params exceed a 256-chip v5e pod
+    return OptConfig(name="adafactor" if n_params > 50e9 else "adamw")
+
+
+def make_train_step(cfg, opt_cfg):
+    lf = T.loss_fn(cfg)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lf)(params, batch)
+        params, opt_state, metrics = opt_update(opt_cfg, params, grads,
+                                                opt_state)
+        return params, opt_state, dict(metrics, loss=loss)
+    return step
+
+
+def _fsdp_for(cfg, shape) -> bool:
+    # FSDP for anything whose Adam-f32 state would not fit replicated
+    return True
+
+
+def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
+               fsdp: bool | None = None, verbose: bool = True,
+               overrides: dict | None = None,
+               fused_credit: bool = False) -> dict:
+    """Lower+compile one cell.
+
+    ``overrides`` are ModelConfig fields for perf variants (the §Perf
+    hillclimb); ``fused_credit=True`` also records the roofline with inner
+    loops (flash attention / SSD scans) given Pallas-kernel VMEM semantics.
+    """
+    cfg = get_arch(arch_name)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod",
+                "status": "skipped", "reason": why}
+
+    override = os.environ.get("DRYRUN_MESH")  # e.g. "4,2" / "2,2,2" (testing)
+    if override:
+        dims = tuple(int(x) for x in override.split(","))
+        axes = ("pod", "data", "model")[-len(dims):] if len(dims) == 3 \
+            else ("data", "model")
+        mesh = jax.make_mesh(dims, axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    pctx.configure(mesh)   # enable activation sharding constraints
+    p_sds = param_shapes(cfg)
+    n_params = count_params(p_sds)
+    n_active = active_params(cfg, n_params)
+    pspecs = param_specs(p_sds, fsdp=True if fsdp is None else fsdp,
+                         mesh=mesh)
+    p_shard = to_named(pspecs, mesh)
+
+    b, s = shape.global_batch, shape.seq_len
+    result = {"arch": arch_name, "shape": shape_name,
+              "mesh": "multipod" if multi_pod else "pod", "chips": chips,
+              "n_params": n_params, "n_active_params": n_active,
+              "kind": shape.kind, "status": "running"}
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = opt_for(cfg, n_params)
+            result["optimizer"] = opt_cfg.name
+            o_sds = jax.eval_shape(lambda p: opt_init(opt_cfg, p), p_sds)
+            ospecs = opt_state_specs(o_sds, pspecs)
+            o_shard = to_named(ospecs, mesh)
+            batch = train_input_specs(cfg, shape)
+            b_shard = to_named(batch_specs(batch, mesh), mesh)
+            step = make_train_step(cfg, opt_cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_sds, o_sds, batch)
+            model_flops = 6.0 * n_active * (b * s)
+        elif shape.kind == "prefill":
+            batch = prefill_input_specs(cfg, shape)
+            b_shard = to_named(batch_specs(batch, mesh), mesh)
+            fn = T.prefill_fn(cfg)
+            jitted = jax.jit(lambda p, bt: fn(p, bt, s + 8),
+                             in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(p_sds, batch)
+            model_flops = 2.0 * n_active * (b * s)
+        else:  # decode
+            cache_sds, tok_sds = decode_input_specs(cfg, shape)
+            c_shard = to_named(cache_specs(cache_sds, mesh, b), mesh)
+            t_shard = to_named(batch_specs({"tokens": tok_sds}, mesh),
+                               mesh)["tokens"]
+            fn = T.decode_fn(cfg)
+            jitted = jax.jit(fn,
+                             in_shardings=(p_shard, c_shard, t_shard),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_sds, cache_sds, tok_sds)
+            model_flops = 2.0 * n_active * b
+
+        result["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+
+    # ---- memory analysis (proves it fits) --------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+        }
+        result["memory"] = mem
+        if verbose:
+            print("memory_analysis:", mem)
+    except Exception as e:          # CPU backend may not implement it
+        result["memory"] = {"error": str(e)[:200]}
+
+    # ---- cost analysis + roofline ----------------------------------------
+    hlo = compiled.as_text()
+    rl = RL.analyze(compiled, model_flops_total=model_flops, chips=chips,
+                    hlo_text=hlo)
+    result["roofline"] = rl.to_dict()
+    result["hlo_bytes"] = len(hlo)
+    if fused_credit:
+        from ..parallel import hlo_cost as HC
+        comps, entry = HC.parse_module(hlo)
+        c2 = HC._comp_cost(comps, entry or "__entry__", {}, fused=False,
+                           fuse_inner_loops=True)
+        rl2 = RL.Roofline(
+            flops=c2.flops, bytes_accessed=c2.bytes_accessed,
+            collective_bytes=c2.collective_bytes,
+            collectives=dict(c2.collectives),
+            collective_counts=dict(c2.collective_counts),
+            model_flops_total=model_flops, chips=chips)
+        result["roofline_fused"] = rl2.to_dict()
+    # raw XLA cost_analysis for reference (undercounts loop bodies)
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        result["xla_cost_analysis"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        }
+        if verbose:
+            print("cost_analysis (raw, loop bodies once): flops=%.3e bytes=%.3e"
+                  % (result["xla_cost_analysis"]["flops"],
+                     result["xla_cost_analysis"]["bytes_accessed"]))
+    except Exception as e:
+        result["xla_cost_analysis"] = {"error": str(e)[:200]}
+    result["status"] = "ok"
+    if verbose:
+        print("roofline:", json.dumps(rl.to_dict(), indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for sh in SHAPES:
+                cells.append((a, sh))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multipod]
+
+    failures = 0
+    for a, sh in cells:
+        for mp in meshes:
+            tag = f"{a} x {sh} x {'multipod' if mp else 'pod'}"
+            print(f"=== dry-run {tag} ===", flush=True)
+            try:
+                res = lower_cell(a, sh, mp,
+                                 fsdp=(not args.no_fsdp))
+            except Exception as e:
+                traceback.print_exc()
+                res = {"arch": a, "shape": sh,
+                       "mesh": "multipod" if mp else "pod",
+                       "status": "error", "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(res) + "\n")
+            print(f"=== {tag}: {res['status']} ===", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state — required because the dry-run must set
+XLA_FLAGS before any JAX initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned production mesh: 16x16 = 256 chips per pod ('data' x
+    'model'); the multi-pod variant adds a leading 'pod' axis (2 pods =
+    512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_tiny_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU multi-device tests (run under
+    --xla_force_host_platform_device_count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,65 @@
+"""Serving launcher: run the SMSE engine over a synthetic request trace.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --requests 100 --merging adaptive --pruning --heuristic EDF
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from ..configs.registry import get_arch
+from ..core.pruning import PruningConfig
+from ..models import transformer as T
+from ..serving.engine import EngineConfig, Request, ServingEngine
+
+
+def synth_trace(n: int, vocab: int, n_prompts: int = 8, rate: float = 0.2,
+                deadline: float = 400.0, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    prompts = [tuple(rng.integers(1, vocab, size=12).tolist())
+               for _ in range(n_prompts)]
+    trace, t = [], 0.0
+    for _ in range(n):
+        trace.append((t, Request(
+            prompt=prompts[int(rng.integers(0, n_prompts))], op="generate",
+            n_new=4, temperature=float(rng.choice([0.0, 0.0, 0.7])),
+            seed=int(rng.integers(0, 3)), deadline=t + deadline)))
+        t += float(rng.exponential(1.0 / rate))
+    return trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--units", type=int, default=2)
+    ap.add_argument("--heuristic", default="EDF")
+    ap.add_argument("--merging", default="adaptive",
+                    choices=["none", "conservative", "aggressive", "adaptive"])
+    ap.add_argument("--pruning", action="store_true")
+    ap.add_argument("--rate", type=float, default=0.2)
+    ap.add_argument("--deadline", type=float, default=400.0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced().scaled(n_layers=2, remat=False)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(
+        n_units=args.units, heuristic=args.heuristic, merging=args.merging,
+        pruning=PruningConfig(initial_defer_threshold=0.15,
+                              base_drop_threshold=0.1)
+        if args.pruning else None,
+        max_len=64)
+    engine = ServingEngine(cfg, params, ecfg)
+    trace = synth_trace(args.requests, cfg.vocab, rate=args.rate,
+                        deadline=args.deadline)
+    stats = engine.run(trace)
+    print(json.dumps(stats, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""``input_specs()``: ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation (the dry-run pattern).
+
+Modality frontends are STUBS per the assignment: [vlm]/[audio] cells receive
+precomputed patch/frame embeddings here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import transformer as T
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"labels": SDS((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["tokens"] = SDS((b, s), jnp.int32)
+        # audio frontend stub: 1 frame embedding per 4 target tokens
+        batch["enc_embeds"] = SDS((b, s // 4, cfg.d_model), jnp.bfloat16)
+    elif cfg.embed_inputs:
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    else:
+        batch["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"tokens": SDS((b, s), jnp.int32),
+                "enc_embeds": SDS((b, s // 4, cfg.d_model), jnp.bfloat16)}
+    if cfg.embed_inputs:
+        return {"tokens": SDS((b, s), jnp.int32)}
+    return {"embeds": SDS((b, s, cfg.d_model), jnp.bfloat16)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache_specs, token_specs) for a single decode step with a KV cache
+    of ``shape.seq_len`` tokens."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, b, s))
+    tokens = SDS((b,), jnp.int32)
+    return cache, tokens
+
+
+def param_shapes(cfg: ModelConfig):
+    return T.init_abstract(cfg)
+
+
+def count_params(shapes) -> int:
+    import math
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree_util.tree_leaves(shapes))
+
+
+def active_params(cfg: ModelConfig, total: int) -> int:
+    """Active parameters per token (MoE discount) for MODEL_FLOPS."""
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    n_moe_layers = (cfg.n_layers if m.layer_period == 1 else
+                    cfg.n_layers // m.layer_period)
+    if m.layer_period == 1:
+        n_moe_layers = cfg.n_layers - 1          # layer 0 dense
+    routed_total = n_moe_layers * m.n_experts * per_expert
+    routed_active = n_moe_layers * m.top_k * per_expert
+    return total - routed_total + routed_active

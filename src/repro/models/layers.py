@@ -1,0 +1,404 @@
+"""Core neural layers in pure JAX (no flax): params are nested dicts of
+arrays, every layer is an ``init(key, ...) -> params`` plus a pure apply
+function.  All matmul weights are stored (in_dim, out_dim).
+
+Includes a double-blocked flash-style attention in plain jnp (used for long
+sequences so the lowered HLO never materializes an (S x S) score tensor) and
+a single-query decode attention that supports sequence-sharded KV caches.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel import ctx as pctx
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, bias: bool = False):
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) / math.sqrt(d_in)
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"emb": (jax.random.normal(key, (vocab, d), dtype=jnp.float32)
+                    * 0.02).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["emb"], tokens, axis=0)
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — blocked flash-style jnp implementation
+# ---------------------------------------------------------------------------
+
+def attention_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False, dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * head_dim, dtype, qkv_bias),
+        "wk": dense_init(k2, d_model, n_kv_heads * head_dim, dtype, qkv_bias),
+        "wv": dense_init(k3, d_model, n_kv_heads * head_dim, dtype, qkv_bias),
+        "wo": dense_init(k4, n_heads * head_dim, d_model, dtype, False),
+    }
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, Hkv, hd) -> (B, S, Hkv*groups, hd)."""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)) \
+        .reshape(b, s, h * groups, d)
+
+
+def full_attention(q, k, v, causal: bool = True, q_offset: int = 0):
+    """Reference O(S^2)-memory attention.  q: (B,Sq,H,hd), k/v: (B,Sk,H,hd)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)
+
+
+def _blocked_mask(qi, kj, q_block, kv_block, sk, causal):
+    """(q_block, kv_block) validity mask for tile (qi, kj)."""
+    qpos = qi * q_block + jnp.arange(q_block)
+    kpos = kj * kv_block + jnp.arange(kv_block)
+    mask = kpos[None, :] < sk
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    return mask
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash(q, k, v, causal, sk):
+    out, _, _ = _flash_fwd_inner(q, k, v, causal, sk)
+    return out
+
+
+def _flash_fwd_inner(q, k, v, causal, sk):
+    b, nq, qb, h, hd = q.shape
+    nk, kb = k.shape[1], k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+
+    def per_qblock(qi, q_tile):
+        def step(carry, inputs):
+            m, l, acc = carry
+            kj, k_tile, v_tile = inputs
+            s = (jnp.einsum("bqhd,bkhd->bhqk", q_tile, k_tile)
+                 .astype(jnp.float32) * scale)
+            mask = _blocked_mask(qi, kj, qb, kb, sk, causal)
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] \
+                + jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_tile.dtype),
+                             v_tile).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = pctx.shard_bh(jnp.full((b, h, qb), -1e30, dtype=jnp.float32))
+        l0 = pctx.shard_bh(jnp.zeros((b, h, qb), dtype=jnp.float32))
+        a0 = pctx.shard_bh(jnp.zeros((b, h, qb, hd), dtype=jnp.float32))
+        (m, l, acc), _ = lax.scan(
+            step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return out.astype(q.dtype), m, l       # (b,h,qb,hd), (b,h,qb) x2
+
+    outs, ms, ls = lax.map(lambda a: per_qblock(*a),
+                           (jnp.arange(nq), jnp.moveaxis(q, 1, 0)))
+    return (jnp.moveaxis(outs, 0, 1), jnp.moveaxis(ms, 0, 1),
+            jnp.moveaxis(ls, 0, 1))            # (b,nq,h,qb,hd), (b,nq,h,qb)
+
+
+def _flash_fwd(q, k, v, causal, sk):
+    out, m, l = _flash_fwd_inner(q, k, v, causal, sk)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd(causal, sk, res, dout):
+    """Flash backward: recompute score tiles; residuals are O(S), not O(S^2).
+
+    Layouts: q (b,nq,qb,h,hd); k/v (b,nk,kb,h,hd); out/dout (b,nq,h,qb,hd);
+    m/l (b,nq,h,qb).
+    """
+    q, k, v, out, m, l = res
+    b, nq, qb, h, hd = q.shape
+    nk, kb = k.shape[1], k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    l_safe = jnp.maximum(l, 1e-20)
+    # delta_i = sum_d dO_id * O_id   (b, nq, h, qb)
+    delta = jnp.einsum("bnhqd,bnhqd->bnhq", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    def tile_p(q_tile, k_tile, qi, kj, m_q, l_q):
+        s = (jnp.einsum("bqhd,bkhd->bhqk", q_tile, k_tile)
+             .astype(jnp.float32) * scale)
+        mask = _blocked_mask(qi, kj, qb, kb, sk, causal)
+        p = jnp.exp(s - m_q[..., None]) / l_q[..., None]
+        return jnp.where(mask[None, None], p, 0.0)
+
+    # --- dq: per q block, scan kv blocks ---------------------------------
+    def dq_block(args):
+        qi, q_tile, do_tile, m_q, l_q, d_q = args
+        do_t = do_tile.astype(jnp.float32)     # already (b, h, qb, hd)
+
+        def step(dq_acc, inputs):
+            kj, k_tile, v_tile = inputs
+            p = tile_p(q_tile, k_tile, qi, kj, m_q, l_q)
+            dp = jnp.einsum("bhqd,bkhd->bhqk", do_t,
+                            v_tile.astype(jnp.float32))
+            ds = p * (dp - d_q[..., None])
+            dq_acc = dq_acc + scale * jnp.einsum(
+                "bhqk,bkhd->bqhd", ds, k_tile.astype(jnp.float32))
+            return dq_acc, None
+
+        dq0 = jnp.zeros((b, qb, h, hd), jnp.float32)
+        dq, _ = lax.scan(step, dq0,
+                         (jnp.arange(nk), jnp.moveaxis(k, 1, 0),
+                          jnp.moveaxis(v, 1, 0)))
+        return dq
+
+    dq = lax.map(dq_block,
+                 (jnp.arange(nq), jnp.moveaxis(q, 1, 0),
+                  jnp.moveaxis(dout, 1, 0), jnp.moveaxis(m, 1, 0),
+                  jnp.moveaxis(l_safe, 1, 0), jnp.moveaxis(delta, 1, 0)))
+    dq = jnp.moveaxis(dq, 0, 1).astype(q.dtype)
+
+    # --- dk, dv: per kv block, scan q blocks ------------------------------
+    def dkv_block(args):
+        kj, k_tile, v_tile = args
+
+        def step(carry, inputs):
+            dk_acc, dv_acc = carry
+            qi, q_tile, do_tile, m_q, l_q, d_q = inputs
+            p = tile_p(q_tile, k_tile, qi, kj, m_q, l_q)
+            do_t = do_tile.astype(jnp.float32)   # (b, h, qb, hd)
+            dv_acc = dv_acc + jnp.einsum("bhqk,bhqd->bkhd", p, do_t)
+            dp = jnp.einsum("bhqd,bkhd->bhqk", do_t,
+                            v_tile.astype(jnp.float32))
+            ds = p * (dp - d_q[..., None])
+            dk_acc = dk_acc + scale * jnp.einsum(
+                "bhqk,bqhd->bkhd", ds, q_tile.astype(jnp.float32))
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, kb, h, hd), jnp.float32)
+        (dk, dv), _ = lax.scan(
+            step, (z, z),
+            (jnp.arange(nq), jnp.moveaxis(q, 1, 0), jnp.moveaxis(dout, 1, 0),
+             jnp.moveaxis(m, 1, 0), jnp.moveaxis(l_safe, 1, 0),
+             jnp.moveaxis(delta, 1, 0)))
+        return dk, dv
+
+    dk, dv = lax.map(dkv_block,
+                     (jnp.arange(nk), jnp.moveaxis(k, 1, 0),
+                      jnp.moveaxis(v, 1, 0)))
+    dk = jnp.moveaxis(dk, 0, 1).astype(k.dtype)
+    dv = jnp.moveaxis(dv, 0, 1).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, causal: bool = True, q_block: int = 512,
+                    kv_block: int = 1024):
+    """Double-blocked flash attention in pure jnp with a flash backward
+    (custom_vjp): neither direction materializes more than a
+    (q_block x kv_block) score tile per (batch, head) and the saved
+    residuals are O(S) (out, m, l) — the same contract as the TPU Pallas
+    kernel, so the lowered HLO gives a faithful memory picture.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    if sq <= q_block and sk <= kv_block:
+        return full_attention(q, k, v, causal=causal)
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    pq = (-sq) % q_block
+    pk = (-sk) % kv_block
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_block, kp.shape[1] // kv_block
+    qb5 = qp.reshape(b, nq, q_block, h, hd)
+    kb5 = kp.reshape(b, nk, kv_block, h, hd)
+    vb5 = vp.reshape(b, nk, kv_block, h, hd)
+    # padded KV marked invalid via the true sk baked into the tile mask
+    out = _flash(qb5, kb5, vb5, causal, sk)
+    out = out.transpose(0, 1, 3, 2, 4).reshape(b, nq * q_block, h, hd)
+    return out[:, :sq]
+
+
+def decode_attention(q, k_cache, v_cache, length, window: int = 0):
+    """Single-token attention against a KV cache.
+
+    q: (B, H, hd); k/v_cache: (B, Smax, Hkv, hd); length: (B,) valid lengths.
+    Supports GQA (H a multiple of Hkv) and sequence-sharded caches (the
+    masked softmax commutes with GSPMD's partial reductions).
+    """
+    b, smax, hkv, hd = k_cache.shape
+    h = q.shape[1]
+    groups = h // hkv
+    qg = q.reshape(b, hkv, groups, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    pos = jnp.arange(smax)
+    mask = pos[None, :] < length[:, None]                   # (B, Smax)
+    if window:
+        mask = mask & (pos[None, :] >= (length[:, None] - window))
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# full GQA block apply (train/prefill + decode)
+# ---------------------------------------------------------------------------
+
+def attention_apply(p, x, cfg, positions=None, kv_cache=None, length=None,
+                    kv_out: bool = False, memory=None):
+    """GQA attention.
+
+    * train/prefill: x (B,S,D); returns (out, (k,v) if kv_out)
+    * decode:        x (B,1,D) with kv_cache=(k,v) (B,Smax,Hkv,hd), length (B,)
+    * cross-attention: memory (B,Sm,D) — K/V from memory, no causal mask.
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+
+    q = dense(p["wq"], x).reshape(b, s, h, hd)
+    kv_src = memory if memory is not None else x
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    if kv_cache is None or memory is not None:
+        k = dense(p["wk"], kv_src).reshape(b, kv_src.shape[1], hkv, hd)
+        v = dense(p["wv"], kv_src).reshape(b, kv_src.shape[1], hkv, hd)
+        if memory is None:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            kf = _repeat_kv(k, h // hkv)
+            vf = _repeat_kv(v, h // hkv)
+            q, kf, vf = map(pctx.shard_heads, (q, kf, vf))
+            out = flash_attention(q, kf, vf, causal=True,
+                                  q_block=cfg.q_block, kv_block=cfg.kv_block)
+        else:
+            kf = _repeat_kv(k, h // hkv)
+            vf = _repeat_kv(v, h // hkv)
+            q, kf, vf = map(pctx.shard_heads, (q, kf, vf))
+            out = full_attention(q, kf, vf, causal=False)
+        out = dense(p["wo"], out.reshape(b, s, h * hd))
+        out = pctx.shard_hidden(out)
+        return (out, (k, v)) if kv_out else (out, None)
+
+    # single-step decode
+    k_cache, v_cache = kv_cache
+    q = apply_rope(q, positions, cfg.rope_theta)            # (B,1,H,hd)
+    k_new = dense(p["wk"], x).reshape(b, 1, hkv, hd)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    v_new = dense(p["wv"], x).reshape(b, 1, hkv, hd)
+    # scatter the new KV at `length` (per-batch position)
+    idx = length                                            # (B,)
+    k_cache = _scatter_kv(k_cache, k_new, idx)
+    v_cache = _scatter_kv(v_cache, v_new, idx)
+    out = decode_attention(q[:, 0], k_cache, v_cache, length + 1,
+                           window=cfg.sliding_window)
+    out = dense(p["wo"], out.reshape(b, 1, h * hd))
+    return out, (k_cache, v_cache)
+
+
+def _scatter_kv(cache, new, idx):
+    """cache (B,Smax,Hkv,hd) <- new (B,1,Hkv,hd) at per-batch position idx."""
+    onehot = jax.nn.one_hot(idx, cache.shape[1], dtype=cache.dtype)  # (B,Smax)
+    onehot = onehot[:, :, None, None]
+    return cache * (1.0 - onehot) + onehot * new
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p, x):
+    h = pctx.shard_ffn(jax.nn.silu(dense(p["w_gate"], x)) * dense(p["w_up"], x))
+    return pctx.shard_hidden(dense(p["w_down"], h))
+
+
+def cross_entropy_loss(logits, labels, ignore_id: int = -1):
+    """Mean token cross-entropy in f32; labels==ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

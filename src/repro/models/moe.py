@@ -1,0 +1,100 @@
+"""Mixture-of-Experts layer with GShard-style grouped dispatch/combine.
+
+Top-k routing with capacity dropping; optional always-on shared experts
+(DeepSeek-MoE).  Tokens are reshaped into groups so the dispatch tensor is
+(G, Sg, E, C) — bounded per group — and the expert dimension is sharded over
+the 'model' mesh axis (expert parallelism): GSPMD inserts the all-to-alls
+between the token-sharded and expert-sharded einsums.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import ctx as pctx
+from .layers import dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, d_model: int, moe_cfg, dtype=jnp.bfloat16):
+    kg, ke, ks = jax.random.split(key, 3)
+    e = moe_cfg.n_experts
+    f = moe_cfg.d_ff_expert
+    scale_in = 1.0 / math.sqrt(d_model)
+    scale_out = 1.0 / math.sqrt(f)
+    keys = jax.random.split(ke, 3)
+    params = {
+        "router": dense_init(kg, d_model, e, jnp.float32),
+        # stacked expert FFNs (E, d, f) / (E, f, d)
+        "w_gate": (jax.random.normal(keys[0], (e, d_model, f), jnp.float32)
+                   * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(keys[1], (e, d_model, f), jnp.float32)
+                 * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(keys[2], (e, f, d_model), jnp.float32)
+                   * scale_out).astype(dtype),
+    }
+    if moe_cfg.n_shared:
+        params["shared"] = mlp_init(ks, d_model, f * moe_cfg.n_shared, dtype)
+    return params
+
+
+def moe_apply(p, x, moe_cfg):
+    """x: (B, S, D) -> (B, S, D).  Aux loss returned for load balancing."""
+    b, s, d = x.shape
+    e, k = moe_cfg.n_experts, moe_cfg.top_k
+    sg = min(moe_cfg.group_size, b * s)
+    tokens = x.reshape(-1, d)
+    n = tokens.shape[0]
+    pad = (-n) % sg
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    g = tokens.shape[0] // sg
+    xs = pctx.shard_batch_seq(tokens.reshape(g, sg, d))
+
+    logits = (xs.astype(jnp.float32) @ p["router"]["w"])          # (G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(probs, k)                       # (G,Sg,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                    # renorm
+
+    cap = int(math.ceil(k * sg / e * moe_cfg.capacity_factor))
+    # position of each (token, choice) within its expert queue
+    sel_onehot = jax.nn.one_hot(sel, e, dtype=jnp.float32)         # (G,Sg,k,E)
+    flat = sel_onehot.reshape(g, sg * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(g, sg, k, e)
+    pos = (pos_in_expert * sel_onehot).sum(-1)                     # (G,Sg,k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    # combine tensor (G,Sg,E,C)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", sel_onehot, pos_oh,
+                         gate_vals)
+    dispatch = (combine > 0).astype(x.dtype)
+
+    # expert-parallel segment: E over 'model' (GSPMD inserts the all-to-alls)
+    expert_in = pctx.shard_experts(
+        jnp.einsum("gsec,gsd->egcd", dispatch, xs))                # (E,G,C,D)
+    h = pctx.shard_experts(
+        jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"]))
+        * jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"]))
+    expert_out = pctx.shard_experts(
+        jnp.einsum("egcf,efd->egcd", h, p["w_down"]))              # (E,G,C,D)
+    out = pctx.shard_batch_seq(
+        jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), expert_out))
+
+    out = out.reshape(-1, d)
+    if pad:
+        out = out[:n]
+    out = out.reshape(b, s, d)
+
+    if moe_cfg.n_shared and "shared" in p:
+        out = out + mlp_apply(p["shared"], x)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                                   # (E,)
+    ce = sel_onehot.sum(2).mean(axis=(0, 1))                       # (E,)
+    aux = e * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,145 @@
+"""Mamba2 (SSD) blocks in pure JAX.
+
+A faithful-shape multi-head state-space block: input projection to
+(z, x, B, C, dt), short causal conv over the sequence, selective scan with
+per-head scalar decay (the Mamba2 simplification A = -exp(a_log) shared per
+head), gated output projection.
+
+Training/prefill uses a chunked scan (lax.scan over chunks of the sequence
+with an intra-chunk einsum) — the SSD trade-off between parallelism and
+state passing; decode is a single O(1) state update.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel import ctx as pctx
+
+
+def mamba2_init(key, d_model: int, ssm_cfg, dtype=jnp.bfloat16):
+    d_inner = ssm_cfg.expand * d_model
+    n_heads = ssm_cfg.n_ssm_heads or max(1, d_inner // 64)
+    head_d = d_inner // n_heads
+    n = ssm_cfg.state_dim
+    ks = jax.random.split(key, 6)
+    zxbcdt = d_inner * 2 + 2 * n * n_heads + n_heads
+    return {
+        "in_proj": {"w": (jax.random.normal(ks[0], (d_model, zxbcdt), jnp.float32)
+                          / math.sqrt(d_model)).astype(dtype)},
+        "conv_w": (jax.random.normal(ks[1], (ssm_cfg.conv_width, d_inner),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype=dtype),
+        "out_proj": {"w": (jax.random.normal(ks[2], (d_inner, d_model), jnp.float32)
+                           / math.sqrt(d_inner)).astype(dtype)},
+    }
+
+
+def _split_proj(proj, d_inner, n_heads, n):
+    z, xs, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n_heads * n,
+               2 * d_inner + 2 * n_heads * n], axis=-1)
+    return z, xs, b, c, dt
+
+
+def mamba2_apply(p, x, ssm_cfg, state=None, conv_state=None):
+    """x: (B, S, D).  state: (B, H, hd, N) carried across calls (decode).
+
+    Returns (y, new_state, new_conv_state).
+    """
+    bsz, s, d_model = x.shape
+    d_inner = ssm_cfg.expand * d_model
+    n_heads = ssm_cfg.n_ssm_heads or max(1, d_inner // 64)
+    head_d = d_inner // n_heads
+    n = ssm_cfg.state_dim
+    cw = ssm_cfg.conv_width
+
+    proj = pctx.shard_ffn(x @ p["in_proj"]["w"])
+    z, xs, b, c, dt = _split_proj(proj, d_inner, n_heads, n)
+
+    # short causal conv over sequence (depthwise)
+    if conv_state is None:
+        conv_state = jnp.zeros((bsz, cw - 1, d_inner), dtype=xs.dtype)
+    xs_pad = jnp.concatenate([conv_state, xs], axis=1)
+    new_conv_state = xs_pad[:, -(cw - 1):] if cw > 1 else conv_state
+    idx = jnp.arange(s)[:, None] + jnp.arange(cw)[None, :]
+    windows = xs_pad[:, idx]                       # (B, S, cw, d_inner)
+    xs = jax.nn.silu(jnp.einsum("bscd,cd->bsd", windows, p["conv_w"]))
+
+    xh = xs.reshape(bsz, s, n_heads, head_d)
+    bh = b.reshape(bsz, s, n_heads, n).astype(jnp.float32)
+    ch = c.reshape(bsz, s, n_heads, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    decay = jnp.exp(-jnp.exp(p["a_log"])[None, None] * dt)         # (B,S,H)
+
+    if state is None:
+        state = jnp.zeros((bsz, n_heads, head_d, n), jnp.float32)
+    state = pctx.shard_bh(state)
+
+    ck = ssm_cfg.chunk
+    if s == 1:
+        # decode: one selective state update
+        upd = jnp.einsum("bhp,bhn->bhpn", (dt[:, 0][..., None]
+                                           * xh[:, 0].astype(jnp.float32)),
+                         bh[:, 0])
+        state = state * decay[:, 0][..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ch[:, 0])[:, None]
+    else:
+        pad = (-s) % ck
+        def padseq(a, value=0.0):
+            return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                           constant_values=value)
+        xh_, bh_, ch_, dt_ = map(padseq, (xh, bh, ch, dt))
+        # padded steps must be no-ops on the carried state: decay 1 (log 0),
+        # zero input (dt=0 above) — zero-padded decay would WIPE the state
+        dec_ = padseq(decay, value=1.0)
+        nchunks = xh_.shape[1] // ck
+
+        def chunkify(a):
+            return jnp.moveaxis(
+                a.reshape(bsz, nchunks, ck, *a.shape[2:]), 1, 0)
+
+        def chunk_step(carry, inp):
+            st = carry                                   # (B,H,hd,N) f32
+            xc, bc, cc, dtc, dc = inp                    # (B,ck,H,...)
+            # cumulative decay within the chunk
+            logd = jnp.log(jnp.maximum(dc, 1e-20))       # (B,ck,H)
+            cum = jnp.cumsum(logd, axis=1)
+            total = jnp.exp(cum[:, -1])                  # (B,H)
+            # contribution of the incoming state to each position
+            y_state = jnp.einsum("bhpn,bkhn->bkhp", st, cc) \
+                * jnp.exp(cum)[..., None]
+            # intra-chunk (quadratic in ck): causal decay matrix
+            rel = cum[:, :, None, :] - cum[:, None, :, :]      # (B,k,j,H)
+            causal = jnp.tril(jnp.ones((ck, ck)))[None, :, :, None]
+            w = jnp.exp(jnp.where(causal > 0, rel, -jnp.inf)) * causal
+            scores = jnp.einsum("bkhn,bjhn->bkjh", cc, bc)
+            xin = dtc[..., None] * xc.astype(jnp.float32)      # (B,ck,H,hd)
+            y_intra = jnp.einsum("bkjh,bkjh,bjhp->bkhp",
+                                 scores, jnp.moveaxis(w, 3, 3), xin)
+            # state update to pass on
+            wend = jnp.exp(cum[:, -1:, :] - cum)               # (B,ck,H)
+            st_new = st * total[..., None, None] + jnp.einsum(
+                "bkhp,bkhn,bkh->bhpn", xin, bc, wend)
+            return pctx.shard_bh(st_new), (y_state + y_intra)
+
+        state, ys = lax.scan(chunk_step, state,
+                             (chunkify(xh_), chunkify(bh_), chunkify(ch_),
+                              chunkify(dt_), chunkify(dec_)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nchunks * ck, n_heads, head_d)
+        y = y[:, :s]
+
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    # gated RMSNorm (Mamba2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * lax.rsqrt(var + 1e-5)).astype(x.dtype) * p["norm_scale"]
+    return y @ p["out_proj"]["w"], state, new_conv_state

@@ -1,0 +1,189 @@
+"""Optimizers in pure JAX (no optax): AdamW and Adafactor, plus gradient
+clipping and microbatch gradient accumulation.
+
+State layouts mirror the parameter pytree so parameter PartitionSpecs apply
+verbatim (ZeRO-style: when params are FSDP-sharded, so are the moments).
+Adafactor keeps factored second moments (row/col vectors) — the default for
+the 400B-class config where full Adam states cannot fit the pod.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            # f32 master copy: bf16 params would silently swallow updates
+            # smaller than one ulp (~0.8% near 1.0)
+            "master": jax.tree.map(lambda p: p.astype(jnp.float32), params)}
+
+
+def adamw_update(cfg: OptConfig, params, grads, state):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                     state["v"], grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, master, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * master
+        new_master = master - lr * u
+        return new_master.astype(p.dtype), new_master
+
+    out = jax.tree.map(upd, params, state["master"], m, v)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_master = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": step, "m": m, "v": v, "master": new_master}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments)
+# ---------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def adafactor_init(params):
+    def init_one(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"step": jnp.zeros((), jnp.int32),
+            "v": jax.tree.map(init_one, params,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "master": jax.tree.map(lambda p: p.astype(jnp.float32), params)}
+
+
+def adafactor_update(cfg: OptConfig, params, grads, state):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8
+    eps = 1e-30
+
+    def upd(p, master, g, v):
+        g2 = g * g + eps
+        if _factored(p):
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = (vr[..., None] / jnp.maximum(
+                vr.mean(axis=-1, keepdims=True), eps)[..., None]) \
+                * vc[..., None, :]
+            u = g / jnp.sqrt(jnp.maximum(denom, eps))
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": beta2 * v["v"] + (1 - beta2) * g2}
+            u = g / jnp.sqrt(jnp.maximum(nv["v"], eps))
+        # update clipping (RMS <= 1) per Shazeer & Stern
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + cfg.weight_decay * master
+        new_master = master - lr * u
+        return new_master.astype(p.dtype), nv, new_master
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_v = tree.flatten_up_to(state["v"])
+    flat_m = jax.tree_util.tree_leaves(state["master"])
+    outs = [upd(p, ms, g, v)
+            for p, ms, g, v in zip(flat_p, flat_m, flat_g, flat_v)]
+    new_params = tree.unflatten([o[0] for o in outs])
+    new_v = tree.unflatten([o[1] for o in outs])
+    new_master = tree.unflatten([o[2] for o in outs])
+    return new_params, {"step": step, "v": new_v, "master": new_master}, \
+        {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# unified front door
+# ---------------------------------------------------------------------------
+
+def opt_init(cfg: OptConfig, params):
+    if cfg.name == "adamw":
+        return adamw_init(params)
+    if cfg.name == "adafactor":
+        return adafactor_init(params)
+    if cfg.name == "sgd":
+        return {"step": jnp.zeros((), jnp.int32),
+                "master": jax.tree.map(lambda p: p.astype(jnp.float32),
+                                       params)}
+    raise ValueError(cfg.name)
+
+
+def opt_update(cfg: OptConfig, params, grads, state):
+    if cfg.name == "adamw":
+        return adamw_update(cfg, params, grads, state)
+    if cfg.name == "adafactor":
+        return adafactor_update(cfg, params, grads, state)
+    if cfg.name == "sgd":
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        lr = lr_schedule(cfg, step)
+        new_master = jax.tree.map(lambda ms, g: ms - lr * g,
+                                  state["master"], grads)
+        new_params = jax.tree.map(lambda p, ms: ms.astype(p.dtype),
+                                  params, new_master)
+        return new_params, {"step": step, "master": new_master}, \
+            {"lr": lr, "grad_norm": gnorm}
+    raise ValueError(cfg.name)

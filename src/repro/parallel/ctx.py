@@ -1,0 +1,108 @@
+"""Ambient parallelism context for activation sharding constraints.
+
+Model code is mesh-agnostic; the launcher calls ``configure(mesh)`` before
+tracing and the layer code calls the ``shard_*`` helpers, which emit
+``with_sharding_constraint`` only when a context is active.  Without these
+constraints GSPMD is free to replicate scan-carried activations — the
+smollm-360m dry-run showed every chip computing the full global batch
+(8x waste) before constraints pinned the loop state.
+
+Rules:
+  * batch dims shard over DP axes only when divisible (decode with
+    global_batch < |dp| must stay unsharded — the KV cache is
+    sequence-sharded instead),
+  * head/width dims shard over 'model' (padding allowed, e.g. 15 heads on
+    a 16-way axis),
+  * expert dim shards over 'model' (expert parallelism).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"on": False, "dp": ("data",), "tp": "model",
+          "dp_size": 1, "tp_size": 1}
+
+
+def configure(mesh) -> None:
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    _STATE.update(on=True, dp=dp, tp="model" if "model" in names else None,
+                  dp_size=int(jax.numpy.prod(
+                      jax.numpy.array([mesh.shape[a] for a in dp])))
+                  if dp else 1,
+                  tp_size=int(mesh.shape.get("model", 1)))
+
+
+def disable() -> None:
+    _STATE["on"] = False
+
+
+def active() -> bool:
+    return _STATE["on"]
+
+
+def _wsc(x, spec):
+    try:
+        return lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def _dp_for(dim: int):
+    dp = _STATE["dp"]
+    if not dp:
+        return None
+    return dp if dim % max(_STATE["dp_size"], 1) == 0 else None
+
+
+def shard_batch_seq(x):
+    """(B, S, ...) activations: batch over DP."""
+    if not _STATE["on"] or x.ndim < 2:
+        return x
+    spec = (_dp_for(x.shape[0]),) + (None,) * (x.ndim - 1)
+    return _wsc(x, spec)
+
+
+def shard_hidden(x):
+    """(B, S, D): batch over DP, D replicated (Megatron activations)."""
+    return shard_batch_seq(x)
+
+
+def shard_heads(x):
+    """(B, S, H, hd): batch over DP, heads over TP (padded if needed)."""
+    if not _STATE["on"] or x.ndim != 4:
+        return x
+    return _wsc(x, (_dp_for(x.shape[0]), None, _STATE["tp"], None))
+
+
+def shard_ffn(x):
+    """(B, S, F): FFN width over TP."""
+    if not _STATE["on"] or x.ndim != 3:
+        return x
+    return _wsc(x, (_dp_for(x.shape[0]), None, _STATE["tp"]))
+
+
+def shard_experts(x):
+    """(E, ...): expert dim over TP ('model') — expert parallelism."""
+    if not _STATE["on"]:
+        return x
+    return _wsc(x, (_STATE["tp"],) + (None,) * (x.ndim - 1))
+
+
+def shard_bh(x):
+    """(B, H, ...): batch over DP, heads over TP (scan carries, SSM state)."""
+    if not _STATE["on"] or x.ndim < 2:
+        return x
+    return _wsc(x, (_dp_for(x.shape[0]), _STATE["tp"])
+                + (None,) * (x.ndim - 2))
+
+
+def shard_logits(x):
+    """(..., V): vocab over TP."""
+    if not _STATE["on"]:
+        return x
+    spec = (_dp_for(x.shape[0]),) + (None,) * (x.ndim - 2) + (_STATE["tp"],)
+    return _wsc(x, spec)

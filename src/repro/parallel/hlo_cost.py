@@ -1,0 +1,346 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` visits while-loop bodies ONCE, so any model
+with scanned layers (ours: all of them) is undercounted by the loop trip
+count.  This module re-derives per-chip cost from ``compiled.as_text()``:
+
+  * builds a per-computation SSA symbol table (operands are printed without
+    shapes in optimized HLO),
+  * multiplies while-body costs by the loop trip count (XLA annotates
+    ``backend_config={"known_trip_count":{"n":...}}``; falls back to the
+    integer constant in the loop condition),
+  * counts MXU FLOPs from ``dot`` ops (2 x result-elements x contraction),
+  * approximates HBM bytes as result+operand bytes of top-level ops
+    (fusion internals excluded — XLA materializes fusion results once),
+  * attributes collective bytes (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), loop-weighted.
+
+This is also the profiling tool for the §Perf hillclimb: per-collective
+byte/count tables and dot inventories come from here.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z][a-z0-9]*\[[0-9,]*\]\S*)\s+([a-z][\w\-]*)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count[\"':\s{]+n[\"':\s]+(\d+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_ATTR_COMP_RE = re.compile(
+    r"(calls|body|condition|to_apply|true_computation|false_computation)"
+    r"=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims(s: str) -> list[int]:
+    return [int(x) for x in s.split(",") if x] if s else []
+
+
+def _shape_list(span: str) -> list[tuple[str, list[int]]]:
+    return [(d, _dims(dd)) for d, dd in _SHAPE_RE.findall(span)]
+
+
+def _nbytes(shapes) -> float:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 0)
+    return float(total)
+
+
+@dataclass
+class _Instr:
+    name: str
+    opcode: str
+    result: list                     # [(dtype, dims)]
+    operand_names: list
+    attrs: dict                      # attribute -> computation name
+    branches: list
+    trip: int | None
+    contract_dims: list
+    line: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    is_entry: bool = False
+    instrs: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # name -> result shapes
+
+
+def parse_module(text: str) -> tuple[dict, str | None]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = comment_re.sub("", line).strip()
+        if not s:
+            continue
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            # computation header: [ENTRY] %name (params) -> shape {
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", s)
+            if m:
+                cur = _Comp(m.group(2), is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    entry = cur.name
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(s)
+        om = _OPCODE_RE.search(s)
+        if not im or not om:
+            continue
+        name = im.group(1)
+        head, opcode = om.group(1), om.group(2)
+        result = _shape_list(head)
+        # operand span: between the first "(" after the opcode and its close
+        pstart = s.find("(", om.end(2))
+        pend = s.find(")", pstart) if pstart >= 0 else -1
+        oper_names = _OPERAND_RE.findall(s[pstart:pend + 1]) if pstart >= 0 else []
+        attrs = {k: v for k, v in _ATTR_COMP_RE.findall(s)}
+        bm = _BRANCHES_RE.search(s)
+        branches = [b.strip().lstrip("%") for b in bm.group(1).split(",")] \
+            if bm else []
+        tm = _TRIP_RE.search(s)
+        cm = _CONTRACT_RE.search(s)
+        ins = _Instr(name=name, opcode=opcode, result=result,
+                     operand_names=oper_names, attrs=attrs, branches=branches,
+                     trip=int(tm.group(1)) if tm else None,
+                     contract_dims=_dims(cm.group(1)) if cm else [],
+                     line=s)
+        cur.instrs.append(ins)
+        cur.symbols[name] = result
+    return comps, entry
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)
+    collective_counts: dict = field(default_factory=dict)
+    dot_calls: float = 0.0
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.dot_calls += other.dot_calls * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = (self.collective_counts.get(k, 0)
+                                         + v * mult)
+
+
+def _root_instr(comp: _Comp | None):
+    if comp is None or not comp.instrs:
+        return None
+    for ins in comp.instrs:
+        if "ROOT" in ins.line.split("=")[0]:
+            return ins
+    return comp.instrs[-1]
+
+
+def _find_dus(comp: _Comp | None, fusion_result) -> _Instr | None:
+    """A dynamic-update-slice inside a fusion whose shape matches the fusion
+    result (possibly behind convert/bitcast wrappers) — an in-place update."""
+    if comp is None:
+        return None
+    for ins in comp.instrs:
+        if ins.opcode == "dynamic-update-slice" \
+                and len(ins.operand_names) > 1 \
+                and ins.result and fusion_result \
+                and ins.result[0][1] == fusion_result[0][1]:
+            return ins
+    return None
+
+
+def _trip_count(comps, cond_name: str | None) -> int:
+    if not cond_name:
+        return 1
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts = []
+    for ins in cond.instrs:
+        consts += [int(x) for x in _CONST_RE.findall(ins.line)]
+    return max(consts) if consts else 1
+
+
+def _dot_flops(comp: _Comp, ins: _Instr) -> float:
+    out_elems = 1
+    for _, dims in ins.result[:1]:
+        for d in dims:
+            out_elems *= d
+    lhs_shapes = comp.symbols.get(ins.operand_names[0], []) \
+        if ins.operand_names else []
+    lhs = lhs_shapes[0][1] if lhs_shapes else []
+    contract = 1
+    for idx in ins.contract_dims:
+        if idx < len(lhs):
+            contract *= lhs[idx]
+    return 2.0 * out_elems * max(contract, 1)
+
+
+def _operand_bytes(comp: _Comp, ins: _Instr) -> float:
+    total = 0.0
+    for nm in ins.operand_names:
+        total += _nbytes(comp.symbols.get(nm, []))
+    return total
+
+
+# opcodes whose HBM traffic is NOT operands+result
+_ZERO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "iota"}
+# sliced reads/writes: traffic ~ the slice, not the sliced-into buffer
+_SLICE_READS = {"dynamic-slice", "slice", "gather"}
+
+
+def _hbm_bytes(comp: _Comp, ins: _Instr) -> float:
+    """First-order HBM traffic of one top-level instruction."""
+    op = ins.opcode
+    if op in _ZERO_BYTES:
+        return 0.0
+    if op in _SLICE_READS:
+        return 2.0 * _nbytes(ins.result)          # read slice + write result
+    if op == "dynamic-update-slice":
+        # read the update operand + write that region (in-place buffer)
+        upd = ins.operand_names[1] if len(ins.operand_names) > 1 else None
+        ub = _nbytes(comp.symbols.get(upd, [])) if upd else 0.0
+        return 2.0 * ub
+    if op in ("broadcast", "reshape", "transpose", "copy", "convert",
+              "reverse"):
+        return 2.0 * _nbytes(ins.result)
+    if op == "while":
+        return 0.0                                 # body ops carry the cost
+    return _nbytes(ins.result) + _operand_bytes(comp, ins)
+
+
+def _comp_cost(comps, name: str, memo: dict, fused: bool,
+               in_loop: bool = False, fuse_inner_loops: bool = False
+               ) -> HloCost:
+    key = (name, fused, in_loop, fuse_inner_loops)
+    if key in memo:
+        return memo[key]
+    memo[key] = HloCost()            # cycle guard
+    comp = comps.get(name)
+    if comp is None:
+        return memo[key]
+    cost = HloCost()
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op == "dot":
+            cost.flops += _dot_flops(comp, ins)
+            cost.dot_calls += 1
+        if not fused:
+            cost.bytes_accessed += _hbm_bytes(comp, ins)
+        hit_coll = False
+        for c in _COLLECTIVES:
+            if (op == c or op.startswith(c + "-")) and not op.endswith("-done"):
+                nb = _nbytes(ins.result)
+                cost.collective_bytes += nb
+                cost.collectives[c] = cost.collectives.get(c, 0) + nb
+                cost.collective_counts[c] = \
+                    cost.collective_counts.get(c, 0) + 1
+                hit_coll = True
+                break
+        if hit_coll:
+            continue
+        if op == "while":
+            body = ins.attrs.get("body")
+            cond = ins.attrs.get("condition")
+            trips = ins.trip if ins.trip is not None \
+                else _trip_count(comps, cond)
+            if body and fuse_inner_loops and in_loop:
+                # Pallas-kernel semantics for inner loops (flash attention /
+                # SSD chunk scans): loop-carried tiles stay in VMEM; HBM
+                # traffic = the loop's inputs+outputs, touched once.  FLOPs
+                # and collectives still accumulate per trip.
+                inner = _comp_cost(comps, body, memo, fused=False,
+                                   in_loop=True,
+                                   fuse_inner_loops=fuse_inner_loops)
+                once = _nbytes(ins.result) + _operand_bytes(comp, ins)
+                fused_cost = HloCost(
+                    flops=inner.flops * trips,
+                    bytes_accessed=once,
+                    collective_bytes=inner.collective_bytes * trips,
+                    collectives={k: v * trips
+                                 for k, v in inner.collectives.items()},
+                    collective_counts={k: v * trips for k, v
+                                       in inner.collective_counts.items()},
+                    dot_calls=inner.dot_calls * trips)
+                cost.add(fused_cost)
+                continue
+            if body:
+                cost.add(_comp_cost(comps, body, memo, fused=False,
+                                    in_loop=True,
+                                    fuse_inner_loops=fuse_inner_loops),
+                         trips)
+            continue
+        if op == "fusion":
+            called = ins.attrs.get("calls")
+            if called:
+                cost.add(_comp_cost(comps, called, memo, fused=True))
+                # in-place update fusions: XLA declares the full buffer as
+                # the fusion result but only the updated slice moves (the
+                # DUS aliases its operand); correct the over-count
+                dus = _find_dus(comps.get(called), ins.result)
+                if dus is not None and not fused:
+                    upd = _nbytes(comps[called].symbols.get(
+                        dus.operand_names[1], []))
+                    full = _nbytes(ins.result)
+                    # counted result(full) + aliased operand(full); true
+                    # traffic is read+write of the updated slice only
+                    cost.bytes_accessed -= max(2.0 * full - 2.0 * upd, 0.0)
+            continue
+        if op == "conditional":
+            branch_comps = ins.branches or [v for k, v in ins.attrs.items()
+                                            if k.endswith("computation")]
+            if branch_comps:
+                # worst-case branch
+                costs = [_comp_cost(comps, b, memo, fused=False)
+                         for b in branch_comps]
+                cost.add(max(costs, key=lambda c_: c_.flops))
+            continue
+        for attr in ("calls", "to_apply"):
+            called = ins.attrs.get(attr)
+            if called:
+                cost.add(_comp_cost(comps, called, memo, fused=True))
+    memo[key] = cost
+    return cost
+
+
+def analyze_text(text: str) -> HloCost:
+    comps, entry = parse_module(text)
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return HloCost()
+    return _comp_cost(comps, entry, {}, fused=False)

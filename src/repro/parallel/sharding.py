@@ -1,0 +1,225 @@
+"""Sharding rules: parameter / optimizer-state / batch / cache
+PartitionSpecs for the production meshes.
+
+Scheme (MaxText-style logical rules, applied by leaf path):
+
+  * TP  ('model'):  attention heads & FFN width column-sharded; output
+    projections row-sharded; vocab sharded on the embedding/unembedding.
+  * EP  ('model'):  MoE expert axis sharded over the same axis (experts
+    replace FFN width as the model-parallel dimension).
+  * DP  ('data' [+ 'pod']): batch.
+  * FSDP ('data'):  optional ZeRO-3 — parameters (and hence optimizer
+    moments, which mirror the param tree) additionally sharded over 'data'.
+  * SP  ('data'):   long-context decode (global_batch < |dp|) shards the KV
+    cache / SSM state sequence-or-head dims instead of batch.
+
+Non-divisible dims (e.g. 15 heads on a 16-way axis) are padded by the GSPMD
+partitioner; see DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# parents whose 2-D weight is column-sharded (d_in, d_out=TP)
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "up", "in_proj", "unembed"}
+# parents whose 2-D weight is row-sharded (d_in=TP, d_out)
+_ROW = {"wo", "w_down", "down", "out_proj"}
+# replicated small weights
+_REPL = {"router", "wi", "wf", "wo_gate", "wz", "r"}
+
+
+def _trailing_spec(path: tuple[str, ...], ndim: int, fsdp: bool):
+    """PartitionSpec entries for the *logical* trailing dims of a leaf."""
+    parent = path[-2] if len(path) >= 2 else ""
+    leafname = path[-1]
+    in_moe = "moe" in path
+    fs = "data" if fsdp else None
+
+    if leafname == "emb":                       # (vocab, d)
+        return ("model", fs)
+    if parent == "unembed":                     # (d, vocab)
+        return (fs, "model")
+    if in_moe and leafname in ("w_gate", "w_up", "w_down"):
+        return ("model", fs, None)              # (E=EP, d, f) / (E, f, d)
+    if parent in _REPL or leafname in _REPL:
+        return None
+    if parent in _COL:
+        if leafname == "w" and ndim >= 2:
+            return (fs, "model")
+        if leafname == "b":
+            return ("model",)
+    if parent in _ROW and leafname == "w" and ndim >= 2:
+        return ("model", fs)
+    if leafname == "conv_w":                    # (cw, d_inner)
+        return (None, "model")
+    if leafname == "norm_scale" and ndim == 1:
+        return ("model",)
+    return None                                  # replicate
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif hasattr(k, "key"):
+            out.append(str(k.key))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def param_specs(params_shape: Any, fsdp: bool = False, mesh: Mesh | None = None):
+    """PartitionSpec tree matching a parameter (or ShapeDtypeStruct) tree.
+
+    When ``mesh`` is given, axes that do not divide the corresponding dim
+    are dropped (``in_shardings`` require divisibility — e.g. seamless-m4t's
+    256206-token vocabulary on a 16-way tensor axis stays replicated)."""
+
+    def axis_size(axis) -> int:
+        if mesh is None or axis is None:
+            return 1
+        if isinstance(axis, (tuple, list)):
+            out = 1
+            for a in axis:
+                out *= int(mesh.shape[a])
+            return out
+        return int(mesh.shape[axis])
+
+    def spec_one(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        trailing = _trailing_spec(names, nd, fsdp)
+        if trailing is None:
+            return P()
+        trailing = tuple(trailing)[-nd:] if len(trailing) > nd else trailing
+        pad = nd - len(trailing)
+        entries = list((None,) * pad + tuple(trailing))
+        if mesh is not None:
+            for i, ax in enumerate(entries):
+                if ax is not None and leaf.shape[i] % axis_size(ax) != 0:
+                    entries[i] = None
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec_one, params_shape)
+
+
+def opt_state_specs(opt_state_shape: Any, pspecs: Any):
+    """Optimizer-state specs: moments mirror their parameter's spec;
+    factored Adafactor vectors inherit the matching trimmed spec."""
+
+    pspec_leaves = {}
+
+    def collect(path, spec):
+        pspec_leaves[_path_names(path)] = spec
+    jax.tree_util.tree_map_with_path(collect, pspecs)
+
+    def spec_one(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        if names and names[0] == "step":
+            return P()
+        # strip the optimizer wrapper keys to find the parameter path
+        core = tuple(n for n in names if n not in
+                     ("m", "v", "vr", "vc", "master"))
+        # try progressively shorter suffix matches
+        for cand, spec in pspec_leaves.items():
+            if cand == core:
+                base = spec
+                break
+        else:
+            return P()
+        entries = tuple(base) + (None,) * max(0, nd - len(tuple(base)))
+        entries = entries[:nd]
+        if names[-1] == "vr":      # mean over last dim: drop last entry
+            full = tuple(base)
+            entries = (full[:-1] + (None,) * nd)[:nd]
+        if names[-1] == "vc":      # mean over second-to-last dim
+            full = tuple(base)
+            keep = full[:-2] + full[-1:] if len(full) >= 2 else full
+            entries = (tuple(keep) + (None,) * nd)[:nd]
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec_one, opt_state_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def spec_one(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if leaf.shape[0] % dp_size(mesh) != 0:
+            # in_shardings require divisibility (unlike constraints, which
+            # GSPMD pads): replicate, e.g. long_500k's batch of 1
+            return P(*((None,) * nd))
+        return P(*((dp,) + (None,) * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_one, batch_shape)
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh, global_batch: int):
+    """KV-cache/state specs for decode.
+
+    Normal decode: batch over DP and the KV *sequence* over 'model' —
+    flash-decode parallelism: every model-shard reads 1/TP of the context
+    and the softmax combines via psum.  (Leaving the cache replicated over
+    'model' makes GSPMD all-gather the full stacked cache in f32 — an
+    86 GB/chip/token mistake caught in §Perf iteration 1.)
+    Long-context (global_batch < |dp|): the sequence shards over 'data' too.
+    """
+    dp = dp_axes(mesh)
+    seq_parallel = global_batch < dp_size(mesh)
+
+    def spec_one(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        name = names[-1]
+        if name in ("len", "enc_len"):
+            return P(dp) if not seq_parallel else P()
+        if name in ("k", "v", "ck", "cv"):
+            # (L, B, S, Hkv, hd) or (G, B, S, Hkv, hd)
+            if seq_parallel:
+                return P(None, None, ("data", "model"), None, None)
+            if leaf.shape[2] % max(int(mesh.shape.get("model", 1)), 1) == 0:
+                return P(None, dp, "model", None, None)
+            return P(None, dp, None, None, None)
+        if name == "ssm":          # (G, period, B, H, hd, N)
+            if seq_parallel:
+                return P(None, None, None, "model", None, None)
+            return P(None, None, dp, "model", None, None)
+        if name == "conv":         # (G, period, B, cw-1, d_inner)
+            if seq_parallel:
+                return P(None, None, None, None, "model")
+            return P(None, None, dp, None, "model")
+        if name == "C":            # (pairs, B, H, hd, hd)
+            return P(None, None if seq_parallel else dp, None, None, None)
+        if name in ("n", "m", "sc", "sn", "sm", "sh"):
+            return P(*( (None,) + ((None,) if seq_parallel else (dp,))
+                        + (None,) * (nd - 2)))
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_one, cache_shape)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

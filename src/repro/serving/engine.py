@@ -1,0 +1,501 @@
+"""SMSE — Serverless Model Serving Engine (dissertation Ch. 6, adapted).
+
+The media-processing engine's architecture mapped onto LM inference
+(DESIGN.md §2): request ingestion, admission control (hash-based similarity
++ merge appropriateness), a batch queue, a pluggable scheduler with the
+probabilistic pruning mechanism, processing units executing *real* compiled
+JAX model steps, a roofline-calibrated time estimator, an elasticity
+manager, and a result cache (the paper's "stream cachine").
+
+Execution model: processing units are logical workers with independent
+timelines (the thesis's *emulation mode*): model steps run for real and are
+timed; unit clocks advance by the measured durations, so an 8-unit engine
+behaves like 8 parallel units even on one CPU.  Cold-starting a unit costs
+the measured executable-compile time — the serverless cold-start analogue.
+
+Request ops:
+  * ``generate``: prefill + n new tokens (greedy/temperature per request)
+  * ``score``:    prefill, return last-token logprobs
+
+Merge levels (Section 4.2 mapped):
+  * TASK      — identical (prompt, op, params): one execution, fanned out
+  * DATA_OP   — same prompt+op, different params: shared prefill, batched
+                decode with per-request sampling
+  * DATA_ONLY — same prompt: shared prefill cache across ops
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.appropriateness import VirtualQueueEvaluator
+from ..core.merging import MergeLevel, SimilarityDetector, merge_tasks
+from ..core.oversubscription import adaptive_alpha, oversubscription_level
+from ..core.pmf import PMF
+from ..core.pruning import Pruner, PruningConfig
+from ..core.heuristics import MappingContext, make_heuristic
+from ..core.tasks import Machine, Task
+from ..models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    prompt: tuple                  # token ids
+    op: str = "generate"           # generate | score
+    n_new: int = 8
+    temperature: float = 0.0
+    seed: int = 0
+    deadline: float = float("inf")  # engine ticks (10 ms units)
+    rid: int = 0
+    # results ---------------------------------------------------------------
+    tokens: list = field(default_factory=list)
+    logprobs: float | None = None
+    status: str = "queued"
+    completed_at: float | None = None
+
+    @property
+    def params_sig(self) -> tuple:
+        return (self.n_new, round(self.temperature, 4), self.seed)
+
+
+# ---------------------------------------------------------------------------
+# time estimator (roofline-calibrated, then EWMA-corrected)
+# ---------------------------------------------------------------------------
+
+class TimeEstimator:
+    """mean/std execution-time estimates per (op, len-bucket, batch)."""
+
+    def __init__(self, rel_std: float = 0.15):
+        self.rel_std = rel_std
+        self._ewma: dict = {}
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        b = 16
+        while b < n:
+            b *= 2
+        return b
+
+    def key(self, op: str, prompt_len: int, n_new: int, batch: int):
+        return (op, self._bucket(prompt_len), self._bucket(max(n_new, 1)),
+                batch)
+
+    def observe(self, key, dt: float):
+        mu = self._ewma.get(key)
+        self._ewma[key] = dt if mu is None else 0.7 * mu + 0.3 * dt
+
+    def mean_std(self, op: str, prompt_len: int, n_new: int,
+                 batch: int = 1) -> tuple[float, float]:
+        key = self.key(op, prompt_len, n_new, batch)
+        if key in self._ewma:
+            mu = self._ewma[key]
+        else:
+            # nearest recorded bucket, scaled linearly in tokens
+            candidates = [(k, v) for k, v in self._ewma.items()
+                          if k[0] == op]
+            if candidates:
+                k0, v0 = candidates[0]
+                mu = v0 * (self._bucket(prompt_len) + self._bucket(n_new)) \
+                    / (k0[1] + k0[2])
+            else:
+                # cold estimate: ~5 ticks per 64 prompt tokens + decode steps
+                mu = 5.0 * (prompt_len + n_new * 4) / 64.0
+        return max(mu, 1.0), max(self.rel_std * mu, 0.5)
+
+
+# ---------------------------------------------------------------------------
+# processing unit — real compiled model steps, virtual timeline
+# ---------------------------------------------------------------------------
+
+class ProcessingUnit:
+    COLD_START = None     # measured once, shared across units
+
+    def __init__(self, uid: int, model_cfg, params, max_len: int = 256,
+                 speed: float = 1.0, shared_fns=None):
+        self.uid = uid
+        self.cfg = model_cfg
+        self.params = params
+        self.max_len = max_len
+        self.machine = Machine(mid=uid, mtype="tpu", speed=speed,
+                               queue_size=4)
+        if shared_fns is not None:
+            # warm start: reuse the engine's compiled executables (the
+            # paper's warm container)
+            self._prefill, self._decode = shared_fns
+        else:
+            self._prefill = jax.jit(
+                lambda p, b: T.prefill_fn(model_cfg)(p, b, max_len))
+            self._decode = jax.jit(T.decode_fn(model_cfg))
+        self.warm = False
+
+    @property
+    def fns(self):
+        return (self._prefill, self._decode)
+
+    def warmup(self, prompt_len: int = 16, buckets=(1,)) -> float:
+        """Compile prefill+decode for every batch bucket (the cold start)."""
+        t0 = time.perf_counter()
+        for b in buckets:
+            toks = jnp.zeros((b, prompt_len), jnp.int32)
+            logits, cache = self._prefill(self.params, {"tokens": toks})
+            out = self._decode(self.params, cache, jnp.zeros((b,), jnp.int32))
+            jax.block_until_ready(out[0])
+        self.warm = True
+        return time.perf_counter() - t0
+
+    def execute(self, task: Task, requests: list[Request],
+                rng: np.random.Generator, buckets=(1, 2, 4, 8)) -> float:
+        """Run the (possibly merged) task; returns wall seconds used.
+
+        Batch sizes are padded to fixed buckets so each (shape) executable
+        compiles once (the per-shape compile is the serverless cold start;
+        re-use afterwards is the paper's warm container)."""
+        t0 = time.perf_counter()
+        prompt = np.asarray(requests[0].prompt, np.int32)
+        batch = len(requests)
+        bucket = next((b for b in buckets if b >= batch), batch)
+        toks = jnp.asarray(np.tile(prompt[None, :], (bucket, 1)))
+        logits, cache = self._prefill(self.params, {"tokens": toks})
+        n_new = max((r.n_new for r in requests if r.op == "generate"),
+                    default=0)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs = [[] for _ in requests]
+        temps = jnp.asarray([max(r.temperature, 1e-6) for r in requests]
+                            + [1e-6] * (bucket - batch))[:, None]
+        sample = any(r.temperature > 0 for r in requests)
+        for step in range(n_new):
+            for i, r in enumerate(requests):
+                if r.op == "generate" and step < r.n_new:
+                    outs[i].append(int(cur[i]))
+            logits, cache = self._decode(self.params, cache, cur)
+            if sample:
+                g = jnp.asarray(rng.gumbel(size=logits.shape), logits.dtype)
+                cur = jnp.argmax(logits / temps + g, axis=-1).astype(jnp.int32)
+            else:
+                cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(logits)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        for i, r in enumerate(requests):
+            if r.op == "generate":
+                r.tokens = outs[i]
+            else:
+                r.logprobs = float(lp[i].max())
+        return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+TICKS_PER_SEC = 100     # engine time unit: 1 tick = 10 ms
+
+
+@dataclass
+class EngineConfig:
+    n_units: int = 2
+    max_units: int = 8
+    min_units: int = 1
+    heuristic: str = "EDF"
+    merging: str = "adaptive"          # none|conservative|aggressive|adaptive
+    pruning: PruningConfig | None = None
+    result_cache: bool = True
+    elastic: bool = True
+    scale_up_queue: int = 12           # batch-queue length to add a unit
+    scale_down_queue: int = 2
+    max_len: int = 128
+    merge_degree_cap: int = 5
+    time_scale: float = float(TICKS_PER_SEC)  # virtual ticks per wall second
+    # TPU batching economics (hardware adaptation, DESIGN.md §2): decode is
+    # HBM-bandwidth-bound, weight traffic dominates, so a batch of k costs
+    # (1 + marginal*(k-1)) of a single request rather than k.  The CPU
+    # emulation measures ~linear wall time; virtual time applies the TPU
+    # model.  marginal=1.0 recovers raw CPU timing.
+    batch_marginal_cost: float = 0.15
+    batch_buckets: tuple = (1, 2, 4, 8)
+
+
+class ServingEngine:
+    """Single-process SMSE with virtual unit timelines."""
+
+    def __init__(self, model_cfg, params, cfg: EngineConfig):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        self.params = params
+        self.estimator = TimeEstimator()
+        self.detector = SimilarityDetector()
+        self.heuristic = make_heuristic(cfg.heuristic)
+        self.oracle = _EngineOracle(self.estimator)
+        self.pruner = Pruner(self.oracle, cfg.pruning) if cfg.pruning else None
+        self.units: list[ProcessingUnit] = []
+        self.clock = 0.0
+        self.batch: list[Task] = []
+        self.requests: dict[int, list[Request]] = {}   # task id -> requests
+        self.cache: dict[tuple, list] = {}
+        self.stats = {"completed": 0, "on_time": 0, "missed": 0, "merges": 0,
+                      "cache_hits": 0, "dropped": 0, "cold_starts": 0,
+                      "scale_ups": 0, "scale_downs": 0, "executions": 0}
+        self._rng = np.random.default_rng(0)
+        self._rid = 0
+        self._misses_since_event = 0
+        for _ in range(cfg.n_units):
+            self._add_unit()
+
+    # -- elasticity -----------------------------------------------------------
+    def _add_unit(self):
+        uid = self._next_uid = getattr(self, "_next_uid", 0) + 1
+        shared = self.units[0].fns if self.units else \
+            (self._warm_fns if getattr(self, "_warm_fns", None) else None)
+        unit = ProcessingUnit(uid, self.model_cfg, self.params,
+                              self.cfg.max_len, shared_fns=shared)
+        cold = unit.warmup(buckets=self.cfg.batch_buckets)
+        self._warm_fns = unit.fns
+        if shared is None:
+            self.stats["cold_starts"] += 1
+        else:
+            self.stats["warm_starts"] = self.stats.get("warm_starts", 0) + 1
+        # initial units are pre-warmed before traffic opens (the thesis's
+        # SMSE starts its processing units ahead of the stream); cold/warm
+        # start-up charges virtual time only for mid-run elastic scale-ups
+        if self.clock > 0:
+            unit.machine.busy_until = self.clock + cold * self.cfg.time_scale
+        self.units.append(unit)
+
+    def _elasticity(self):
+        if not self.cfg.elastic:
+            return
+        if self.clock < getattr(self, "_scale_cooldown", 0.0):
+            return
+        qlen = len(self.batch)
+        if qlen >= self.cfg.scale_up_queue and \
+                len(self.units) < self.cfg.max_units:
+            self._add_unit()
+            self.stats["scale_ups"] += 1
+            self._scale_cooldown = self.clock + 100.0
+        elif qlen <= self.cfg.scale_down_queue and \
+                len(self.units) > max(self.cfg.min_units, self.cfg.n_units):
+            # retire only an idle, empty unit (never lose queued work)
+            for i in range(len(self.units) - 1, -1, -1):
+                m = self.units[i].machine
+                if not m.queue and m.busy_until <= self.clock:
+                    self.units.pop(i)
+                    self.stats["scale_downs"] += 1
+                    self._scale_cooldown = self.clock + 100.0
+                    break
+
+    # -- ingestion + admission (Ch. 4) ---------------------------------------
+    def submit(self, req: Request) -> int:
+        req.rid = self._rid
+        self._rid += 1
+        sig = (req.prompt, req.op, req.params_sig)
+        if self.cfg.result_cache and req.op == "generate" and sig in self.cache:
+            req.tokens = list(self.cache[sig])
+            req.status = "done"
+            req.completed_at = self.clock
+            self.stats["cache_hits"] += 1
+            self.stats["completed"] += 1
+            self.stats["on_time"] += 1 if self.clock <= req.deadline else 0
+            return req.rid
+
+        task = Task(ttype=req.op, data_id=str(hash(req.prompt)), op=req.op,
+                    params=req.params_sig, arrival=self.clock,
+                    deadline=req.deadline, user=f"u{req.rid % 8}")
+        task.queue_rank = self.clock
+        self.requests[task.tid] = [req]
+        self.oracle.note_task(task.tid, len(req.prompt), req.n_new)
+
+        merged = None
+        level = None
+        hit = self.detector.find(task) if self.cfg.merging != "none" else None
+        if hit is not None:
+            level, existing = hit
+            viable = (existing.status == "queued"
+                      and existing.merged_into is None
+                      and len(existing.all_requests()) < self.cfg.merge_degree_cap
+                      and existing.tid in self.requests)
+            if viable and self._merge_ok(existing, task, level):
+                merged = merge_tasks(existing, task, level)
+                self.requests[existing.tid] += self.requests.pop(task.tid)
+                self.stats["merges"] += 1
+        if self.cfg.merging != "none":
+            self.detector.on_arrival(task, hit[1] if hit else None, merged,
+                                     level)
+        if merged is None:
+            self.batch.append(task)
+        return req.rid
+
+    def _merge_ok(self, existing: Task, task: Task, level) -> bool:
+        if level is MergeLevel.TASK:
+            return True
+        if self.cfg.merging == "aggressive":
+            return True
+        machines = [u.machine for u in self.units]
+        alpha = 2.0
+        if self.cfg.merging == "adaptive":
+            osl = oversubscription_level(
+                machines, lambda t, m: self.oracle.mean_std(t, m), self.clock)
+            alpha = adaptive_alpha(osl)
+        ev = VirtualQueueEvaluator(machines,
+                                   lambda t, m: self.oracle.mean_std(t, m),
+                                   now=self.clock, alpha=alpha)
+        base = ev.count_misses(self.batch + [task])
+        import copy
+        view = copy.copy(existing)
+        view.children = list(existing.children) + [task]
+        cand = [view if t.tid == existing.tid else t for t in self.batch]
+        return ev.count_misses(cand) <= base
+
+    # -- scheduling + execution ------------------------------------------------
+    def _sync_machines(self):
+        """Expose unit timelines to the scheduling core: a unit busy past
+        `clock` looks like a machine with a running task ending then."""
+        for u in self.units:
+            m = u.machine
+            if m.busy_until > self.clock:
+                m.run_end = m.busy_until
+                if m.running is None:
+                    m.running = Task(ttype="busy", data_id="_",
+                                     op="busy", arrival=self.clock,
+                                     deadline=float("inf"))
+            else:
+                m.running = None
+
+    def _mapping_event(self):
+        self._sync_machines()
+        machines = [u.machine for u in self.units]
+        if self.pruner is not None:
+            # hard-deadline regime: infeasible batch tasks are pruned (the
+            # viewer already received the low-quality fallback — §5 intro)
+            live, dead = [], []
+            for t in self.batch:
+                (dead if t.effective_deadline <= self.clock else live).append(t)
+            for t in dead:
+                self.detector.on_departure(t)
+                self._complete_dropped(t)
+            self.batch = live
+            dropped = self.pruner.drop_pass(machines, self.clock,
+                                            self._misses_since_event)
+            self._misses_since_event = 0
+            for t in dropped:
+                self._complete_dropped(t)
+        if self.batch and any(m.free_slots > 0 for m in machines):
+            ctx = MappingContext(oracle=self.oracle, now=self.clock,
+                                 pruner=self.pruner)
+            mapped = self.heuristic.map_batch(self.batch, machines, ctx)
+            ids = {t.tid for t, _ in mapped}
+            if ids:
+                self.batch = [t for t in self.batch if t.tid not in ids]
+                for t, _ in mapped:
+                    t.status = "mapped"
+                    self.detector.on_departure(t)
+
+    def _complete_dropped(self, task: Task):
+        for t in task.all_requests():
+            for r in self.requests.pop(t.tid, []):
+                r.status = "dropped"
+                self.stats["dropped"] += 1
+                self.stats["missed"] += 1
+        self._misses_since_event += len(task.all_requests())
+
+    def _run_units(self):
+        """Execute one queued task on the most-backlogged idle unit."""
+        progressed = False
+        for unit in sorted(self.units, key=lambda u: u.machine.busy_until):
+            m = unit.machine
+            if m.busy_until > self.clock or not m.queue:
+                continue
+            task = m.queue.pop(0)
+            reqs = []
+            for t in task.all_requests():
+                reqs += self.requests.pop(t.tid, [])
+            if not reqs:
+                continue
+            wall = unit.execute(task, reqs, self._rng,
+                                buckets=self.cfg.batch_buckets)
+            self.stats["executions"] += 1
+            dur = wall * self.cfg.time_scale / m.speed
+            # TPU batching economics: batch-k costs (1 + marginal*(k-1)),
+            # not k (decode is HBM-bound; see EngineConfig)
+            k = len(reqs)
+            if k > 1:
+                dur *= (1.0 + self.cfg.batch_marginal_cost * (k - 1)) / k
+            key = self.estimator.key(task.op, len(reqs[0].prompt),
+                                     max(r.n_new for r in reqs), len(reqs))
+            self.estimator.observe(key, dur)
+            end = max(self.clock, m.busy_until) + dur
+            m.busy_until = end
+            m.running = task
+            m.run_end = end
+            for r in reqs:
+                r.status = "done"
+                r.completed_at = end
+                self.stats["completed"] += 1
+                if end <= r.deadline:
+                    self.stats["on_time"] += 1
+                else:
+                    self.stats["missed"] += 1
+                    self._misses_since_event += 1
+                if self.cfg.result_cache and r.op == "generate":
+                    self.cache[(r.prompt, r.op, r.params_sig)] = list(r.tokens)
+            progressed = True
+        return progressed
+
+    def run(self, requests: list[tuple[float, Request]],
+            tick: float = 0.05) -> dict:
+        """Drive the engine over a virtual-time request trace."""
+        pending = sorted(requests, key=lambda x: x[0])
+        i = 0
+        idle_rounds = 0
+        while i < len(pending) or self.batch or \
+                any(u.machine.queue or u.machine.busy_until > self.clock
+                    for u in self.units):
+            while i < len(pending) and pending[i][0] <= self.clock:
+                self.submit(pending[i][1])
+                i += 1
+            self._elasticity()
+            self._mapping_event()
+            if not self._run_units():
+                idle_rounds += 1
+            else:
+                idle_rounds = 0
+            nexts = [u.machine.busy_until for u in self.units
+                     if u.machine.busy_until > self.clock]
+            if i < len(pending):
+                nexts.append(pending[i][0])
+            self.clock = min(nexts) if nexts else self.clock + tick
+            if idle_rounds > 10000:   # safety
+                break
+        return dict(self.stats)
+
+
+class _EngineOracle:
+    """ExecOracle over the TimeEstimator (drives merging + pruning math)."""
+
+    def __init__(self, estimator: TimeEstimator):
+        self.est = estimator
+        self.dims: dict[int, tuple[int, int]] = {}   # tid -> (plen, n_new)
+
+    def note_task(self, tid: int, prompt_len: int, n_new: int) -> None:
+        self.dims[tid] = (prompt_len, n_new)
+
+    def _task_dims(self, task: Task) -> tuple[int, int, int]:
+        reqs = task.all_requests()
+        dims = [self.dims.get(t.tid, (64, 8)) for t in reqs]
+        return (max(d[0] for d in dims), max(d[1] for d in dims), len(reqs))
+
+    def mean_std(self, task: Task, machine) -> tuple[float, float]:
+        pl, nn, batch = self._task_dims(task)
+        mu, sd = self.est.mean_std(task.op, pl, nn, batch)
+        return mu / machine.speed, sd / machine.speed
+
+    def pmf(self, task: Task, machine) -> PMF:
+        mu, sd = self.mean_std(task, machine)   # already in integer ticks
+        return PMF.from_normal(max(mu, 1.0), max(sd, 0.5))

@@ -1,0 +1,43 @@
+"""Subprocess smokes for the public CLIs (train / serve / dryrun --help)."""
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+ENV = dict(os.environ, PYTHONPATH=SRC)
+
+
+def _run(args, timeout=900, env=ENV):
+    out = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-1500:])
+    return out.stdout
+
+
+def test_train_cli_reduced(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "smollm-360m", "--reduced",
+                "--steps", "6", "--batch", "2", "--seq", "64",
+                "--ckpt-dir", str(tmp_path)])
+    assert "finished at step 6" in out
+    # resume: same command continues (and is a no-op at the target step)
+    out2 = _run(["repro.launch.train", "--arch", "smollm-360m", "--reduced",
+                 "--steps", "6", "--batch", "2", "--seq", "64",
+                 "--ckpt-dir", str(tmp_path)])
+    assert "finished at step 6" in out2
+
+
+def test_serve_cli(tmp_path):
+    out = _run(["repro.launch.serve", "--requests", "12", "--units", "1",
+                "--merging", "adaptive", "--pruning", "--rate", "0.5"])
+    assert '"completed"' in out
+
+
+def test_dryrun_cli_tiny_decode():
+    env = dict(ENV, DRYRUN_DEVICES="8", DRYRUN_MESH="4,2")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-125m",
+         "--shape", "decode_32k"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-1500:]
+    assert "roofline" in out.stdout

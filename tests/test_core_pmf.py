@@ -1,0 +1,176 @@
+"""Unit + property tests for the PMF algebra (Eqs. 5.1-5.7)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pmf import (PMF, DropMode, chance_of_success, convolve_pct,
+                            queue_pcts)
+
+
+def _rand_pmf(rng, n=None, offset=None):
+    n = n or int(rng.integers(1, 40))
+    v = rng.random(n) + 1e-3
+    return PMF(v / v.sum(), offset=int(offset if offset is not None
+                                       else rng.integers(0, 30)))
+
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+def test_impulse_stats():
+    p = PMF.impulse(7)
+    assert p.mean() == 7 and p.std() == 0 and p.mass == 1.0
+    assert p.success_before(7) == 1.0 and p.success_before(6) == 0.0
+
+
+def test_from_normal_moments():
+    p = PMF.from_normal(100, 7)
+    assert abs(p.mean() - 100) < 0.5
+    assert abs(p.std() - 7) < 0.5
+    assert abs(p.mass - 1.0) < 1e-9
+
+
+def test_negative_values_rejected():
+    with pytest.raises(ValueError):
+        PMF(np.array([0.5, -0.5]))
+
+
+def test_scale_speed():
+    p = PMF.from_normal(100, 5)
+    q = p.scale(0.5)  # 2x faster machine
+    assert abs(q.mean() - 50) < 1.0
+
+
+def test_skewness_signs():
+    assert PMF(np.array([0.7, 0.2, 0.1])).skewness() > 0
+    assert PMF(np.array([0.1, 0.2, 0.7])).skewness() < 0
+    assert abs(PMF(np.array([0.2, 0.6, 0.2])).skewness()) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# convolution forms (Eqs. 5.2-5.5)
+# ---------------------------------------------------------------------------
+
+def test_no_drop_is_plain_convolution():
+    rng = np.random.default_rng(0)
+    e, c = _rand_pmf(rng), _rand_pmf(rng)
+    out = convolve_pct(e, c, deadline=None, mode=DropMode.NO_DROP)
+    assert abs(out.mean() - (e.mean() + c.mean())) < 1e-9
+    assert abs(out.mass - 1.0) < 1e-9
+
+
+def test_pend_drop_mass_conserved_and_split():
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        e, c = _rand_pmf(rng), _rand_pmf(rng)
+        dl = int(c.mean() + e.mean())
+        out = convolve_pct(e, c, deadline=dl, mode=DropMode.PEND_DROP)
+        assert abs(out.mass - 1.0) < 1e-9
+        # late prev mass passes through untouched
+        late = sum(c.values[max(0, dl - c.offset):])
+        # all mass at/after dl in `out` >= pass-through mass
+        tail = sum(out.values[max(0, dl - out.offset):]) if out.support_end >= dl else 0
+        assert tail >= late - 1e-9
+
+
+def test_evict_drop_support_bounded():
+    rng = np.random.default_rng(2)
+    for _ in range(20):
+        e, c = _rand_pmf(rng), _rand_pmf(rng)
+        dl = int(c.offset + e.offset + 3)
+        out = convolve_pct(e, c, deadline=dl, mode=DropMode.EVICT_DROP)
+        assert abs(out.mass - 1.0) < 1e-9
+        # the machine is guaranteed free of this task by max(dl, prev frees)
+        assert out.support_end <= max(dl, c.support_end)
+
+
+def test_chance_matches_materialized_convolution():
+    rng = np.random.default_rng(3)
+    for _ in range(30):
+        e, c = _rand_pmf(rng), _rand_pmf(rng)
+        dl = int(e.mean() + c.mean() + rng.integers(-5, 10))
+        # no-drop: memoized == full convolution CDF
+        p_memo = chance_of_success(e, c, dl, droppable_prev=False)
+        p_full = convolve_pct(e, c, None, DropMode.NO_DROP).success_before(dl)
+        assert abs(p_memo - p_full) < 1e-9
+
+
+def test_chance_pend_drop_excludes_late_starts():
+    # prev frees at exactly the deadline -> task i is dropped, chance 0
+    e = PMF.impulse(1)          # exec takes 1
+    c = PMF.impulse(10)         # prev frees at 10
+    assert chance_of_success(e, c, 10, droppable_prev=True) == 0.0
+    assert chance_of_success(e, c, 11, droppable_prev=True) == 1.0
+
+
+def test_queue_pcts_monotone_means():
+    rng = np.random.default_rng(4)
+    pets = [_rand_pmf(rng) for _ in range(4)]
+    pcts = queue_pcts(pets, [10**6] * 4, mode=DropMode.NO_DROP)
+    means = [p.mean() for p in pcts]
+    assert all(b > a for a, b in zip(means, means[1:]))
+
+
+# ---------------------------------------------------------------------------
+# compaction (Fig. 5.7)
+# ---------------------------------------------------------------------------
+
+def test_compaction_preserves_mass_and_mean():
+    p = PMF.from_normal(120, 9)
+    q = p.compact(4)
+    assert abs(q.mass - p.mass) < 1e-12
+    assert abs(q.mean() - p.mean()) < 4.0
+    assert len([v for v in q.values if v > 0]) <= int(np.ceil(len(p.values) / 4)) + 1
+
+
+def test_compaction_range_clamps():
+    p = PMF.from_normal(50, 3)
+    q = p.compact(2, lo=48, hi=52)
+    assert q.offset >= 48 and q.support_end <= 52 + 2
+    assert abs(q.mass - 1.0) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 30), st.integers(0, 60),
+       st.integers(0, 1000))
+def test_prop_mass_conservation(n1, n2, dl_off, seed):
+    rng = np.random.default_rng(seed)
+    e, c = _rand_pmf(rng, n1), _rand_pmf(rng, n2)
+    dl = e.offset + c.offset + dl_off
+    for mode in DropMode:
+        out = convolve_pct(e, c, dl, mode=mode)
+        assert abs(out.mass - 1.0) < 1e-9, mode
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 25), st.integers(1, 25), st.integers(0, 1000))
+def test_prop_chance_bounds_and_monotonicity(n1, n2, seed):
+    rng = np.random.default_rng(seed)
+    e, c = _rand_pmf(rng, n1), _rand_pmf(rng, n2)
+    lo = e.offset + c.offset
+    hi = e.support_end + c.support_end
+    prev = 0.0
+    for dl in range(lo - 1, hi + 2, max(1, (hi - lo) // 8)):
+        p = chance_of_success(e, c, dl, droppable_prev=False)
+        assert -1e-12 <= p <= 1.0 + 1e-12
+        assert p >= prev - 1e-12       # CDF is monotone in the deadline
+        prev = p
+    # past the joint support the chance is certain
+    assert chance_of_success(e, c, hi + 1, droppable_prev=False) > 1 - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 1000))
+def test_prop_compaction_mass(bucket, seed):
+    rng = np.random.default_rng(seed)
+    p = _rand_pmf(rng, int(rng.integers(5, 120)))
+    q = p.compact(bucket)
+    assert abs(q.mass - p.mass) < 1e-12
+    assert abs(q.mean() - p.mean()) <= bucket

@@ -1,0 +1,289 @@
+"""Tests for merging, appropriateness, pruning, heuristics, and the
+end-to-end simulator (Chapters 4-5 behaviour)."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.heuristics import HEURISTICS, MappingContext, make_heuristic
+from repro.core.merge_model import VideoExecModel, VideoMeta
+from repro.core.merging import MergeLevel, SimilarityDetector, merge_tasks
+from repro.core.oversubscription import DropToggle, adaptive_alpha
+from repro.core.pruning import Pruner, PruningConfig
+from repro.core.simulation import (PETOracle, SimConfig, SimStats, Simulator,
+                                   VideoOracle)
+from repro.core.tasks import Machine, PETMatrix, Task
+from repro.core.workload import spiky_hc_workload, video_streaming_workload
+
+
+def _mk_task(ttype="t0", data="d0", op="op0", params=("p0",), arrival=0.0,
+             deadline=100.0):
+    return Task(ttype=ttype, data_id=data, op=op, params=params,
+                arrival=arrival, deadline=deadline)
+
+
+# ---------------------------------------------------------------------------
+# similarity detection (Section 4.3 / Fig. 4.3)
+# ---------------------------------------------------------------------------
+
+class TestSimilarityDetector:
+    def test_levels_priority(self):
+        det = SimilarityDetector()
+        a = _mk_task()
+        det.on_arrival(a, None, None, None)
+        # identical -> task level
+        b = _mk_task()
+        assert det.find(b)[0] is MergeLevel.TASK
+        # same data+op, different params -> data_op
+        c = _mk_task(params=("p1",))
+        assert det.find(c)[0] is MergeLevel.DATA_OP
+        # same data only -> data_only
+        d = _mk_task(op="op1", params=("p0",))
+        assert det.find(d)[0] is MergeLevel.DATA_ONLY
+        # different data -> no match
+        e = _mk_task(data="other")
+        assert det.find(e) is None
+
+    def test_rule3_redirect_to_newest(self):
+        det = SimilarityDetector()
+        a = _mk_task()
+        det.on_arrival(a, None, None, None)
+        b = _mk_task(params=("p1",))
+        hit = det.find(b)
+        assert hit[1].tid == a.tid
+        det.on_arrival(b, hit[1], None, None)   # matched but NOT merged
+        c = _mk_task(params=("p2",))
+        assert det.find(c)[1].tid == b.tid      # redirected to newest
+
+    def test_departure_removes_entries(self):
+        det = SimilarityDetector()
+        a = _mk_task()
+        det.on_arrival(a, None, None, None)
+        det.on_departure(a)
+        assert det.find(_mk_task()) is None
+        assert len(det) == 0
+
+    def test_merged_task_reachable_through_child_keys(self):
+        det = SimilarityDetector()
+        a = _mk_task()
+        det.on_arrival(a, None, None, None)
+        b = _mk_task(params=("p1",))
+        hit = det.find(b)
+        merged = merge_tasks(hit[1], b, MergeLevel.DATA_OP)
+        det.on_arrival(b, hit[1], merged, MergeLevel.DATA_OP)
+        c = _mk_task(params=("p1",))    # identical to b
+        found = det.find(c)
+        assert found is not None and found[1].tid == a.tid  # compound task
+
+
+class TestMergeTasks:
+    def test_merge_keeps_earliest_deadline(self):
+        a = _mk_task(deadline=50)
+        b = _mk_task(params=("p1",), deadline=30)
+        m = merge_tasks(a, b, MergeLevel.DATA_OP)
+        assert m.tid == a.tid
+        assert m.effective_deadline == 30
+        assert b.merged_into == a.tid
+        assert len(m.all_requests()) == 2
+
+    def test_self_merge_rejected(self):
+        a = _mk_task()
+        with pytest.raises(ValueError):
+            merge_tasks(a, a, MergeLevel.TASK)
+
+
+# ---------------------------------------------------------------------------
+# oversubscription machinery
+# ---------------------------------------------------------------------------
+
+class TestToggle:
+    def test_schmitt_hysteresis(self):
+        t = DropToggle(lam=1.0, on_level=2.0)   # lam=1: d == last misses
+        assert not t.observe(1)
+        assert t.observe(3)          # engage at >= 2
+        assert t.observe(1.7)        # stays engaged (off at <= 1.6)
+        assert not t.observe(1.0)    # disengage
+        assert not t.observe(1.9)    # needs >= 2.0 again
+
+    def test_adaptive_alpha_range(self):
+        assert adaptive_alpha(0.0) == 2.0
+        assert adaptive_alpha(1.0) == -2.0
+        assert adaptive_alpha(0.5) == 0.0
+        assert adaptive_alpha(9.9) == -2.0
+
+
+# ---------------------------------------------------------------------------
+# pruner behaviour
+# ---------------------------------------------------------------------------
+
+def _small_system(seed=0):
+    rng = np.random.default_rng(seed)
+    pet = PETMatrix.generate(["t0", "t1"], ["m0", "m1"], rng, mean_range=(8, 20))
+    machines = [Machine(mid=0, mtype="m0", queue_size=3),
+                Machine(mid=1, mtype="m1", queue_size=3)]
+    return pet, machines
+
+
+class TestPruner:
+    def test_drop_pass_only_when_engaged(self):
+        pet, machines = _small_system()
+        oracle = PETOracle(pet)
+        pruner = Pruner(oracle, PruningConfig(toggle_on=5.0, lam=1.0))
+        # hopeless task: deadline already essentially passed
+        doomed = _mk_task(deadline=1.0)
+        machines[0].queue.append(doomed)
+        assert pruner.drop_pass(machines, now=0.0, misses_since_last=0) == []
+        dropped = pruner.drop_pass(machines, now=0.0, misses_since_last=10)
+        assert doomed in dropped
+        assert machines[0].queue == []
+
+    def test_high_chance_tasks_survive(self):
+        pet, machines = _small_system()
+        oracle = PETOracle(pet)
+        pruner = Pruner(oracle, PruningConfig(lam=1.0, toggle_on=1.0))
+        safe = _mk_task(deadline=10_000.0)
+        machines[0].queue.append(safe)
+        dropped = pruner.drop_pass(machines, now=0.0, misses_since_last=10)
+        assert dropped == [] and machines[0].queue == [safe]
+
+    def test_chance_cache_consistency(self):
+        pet, machines = _small_system()
+        oracle = PETOracle(pet)
+        pruner = Pruner(oracle, PruningConfig())
+        t = _mk_task(deadline=60.0)
+        p1 = pruner.success_chance(t, machines[0], 0.0)
+        p2 = pruner.success_chance(t, machines[0], 0.0)   # cached
+        assert p1 == p2
+        machines[0].queue.append(_mk_task(deadline=200.0))
+        p3 = pruner.success_chance(t, machines[0], 0.0)   # queue changed
+        assert p3 <= p1 + 1e-12
+
+    def test_defer_threshold_dynamics(self):
+        pet, machines = _small_system()
+        pruner = Pruner(PETOracle(pet),
+                        PruningConfig(initial_defer_threshold=0.5, theta=0.1,
+                                      dynamic_defer=True))
+        # empty batch + free slots -> Delta < 1 -> threshold decreases
+        v = pruner.update_defer_threshold([], machines, {}, now=0.0)
+        assert v == pytest.approx(0.4)
+        # oversubscribed with zero-competency batch -> decrease again
+        batch = [_mk_task(deadline=5.0) for _ in range(20)]
+        v2 = pruner.update_defer_threshold(batch, machines,
+                                           {t.tid: 0.0 for t in batch}, 0.0)
+        assert v2 < v
+
+    def test_fairness_concession(self):
+        pet, machines = _small_system()
+        pruner = Pruner(PETOracle(pet), PruningConfig(fairness_factor=1.0))
+        for _ in range(20):
+            pruner.fairness.note_pruned("t0")
+        assert pruner.fairness.concession("t0") < pruner.fairness.concession("t1")
+
+
+# ---------------------------------------------------------------------------
+# heuristics
+# ---------------------------------------------------------------------------
+
+class TestHeuristics:
+    @pytest.mark.parametrize("name", sorted(HEURISTICS))
+    def test_all_heuristics_map_without_pruner(self, name):
+        if name in ("PAM", "PAMF"):
+            pytest.skip("require pruner")
+        pet, machines = _small_system()
+        oracle = PETOracle(pet)
+        batch = [_mk_task(ttype=f"t{i % 2}", data=f"d{i}", deadline=200 + i)
+                 for i in range(8)]
+        ctx = MappingContext(oracle=oracle)
+        mapped = make_heuristic(name).map_batch(batch, machines, ctx)
+        assert 1 <= len(mapped) <= 6   # 2 machines x 3 slots
+        for t, m in mapped:
+            assert t in m.queue
+
+    def test_pam_prefers_feasible(self):
+        pet, machines = _small_system()
+        oracle = PETOracle(pet)
+        pruner = Pruner(oracle, PruningConfig(initial_defer_threshold=0.3))
+        doomed = _mk_task(data="dx", deadline=2.0)
+        fine = _mk_task(data="dy", deadline=500.0)
+        ctx = MappingContext(oracle=oracle, pruner=pruner)
+        mapped = make_heuristic("PAM").map_batch([doomed, fine], machines, ctx)
+        names = [t.tid for t, _ in mapped]
+        assert fine.tid in names and doomed.tid not in names
+
+    def test_mct_balances_load(self):
+        pet, machines = _small_system()
+        oracle = PETOracle(pet)
+        batch = [_mk_task(data=f"d{i}", deadline=10_000) for i in range(4)]
+        ctx = MappingContext(oracle=oracle)
+        make_heuristic("MCT").map_batch(batch, machines, ctx)
+        assert all(len(m.queue) >= 1 for m in machines)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end simulator behaviour
+# ---------------------------------------------------------------------------
+
+def _run_video(merging, n=500, pf=None, seed=3):
+    wl = video_streaming_workload(n, span=250.0, seed=seed)
+    machines = [Machine(mid=i, queue_size=4) for i in range(8)]
+    oracle = VideoOracle(wl.exec_model, wl.videos, seed=seed)
+    sim = Simulator([copy.copy(t) for t in wl.tasks], machines, oracle,
+                    SimConfig(heuristic="FCFS-RR", merging=merging,
+                              position_finder=pf, seed=seed))
+    return sim.run()
+
+
+class TestSimulatorMerging:
+    def test_merging_reduces_makespan(self):
+        base = _run_video("none")
+        merged = _run_video("aggressive")
+        assert merged.merges > 0
+        assert merged.makespan < base.makespan
+        # every request is accounted for exactly once
+        assert (merged.on_time + merged.missed + merged.dropped
+                == merged.n_requests)
+
+    def test_conservative_rejects_some(self):
+        st = _run_video("conservative")
+        assert st.merges > 0
+
+    def test_adaptive_runs(self):
+        st = _run_video("adaptive")
+        assert st.merges > 0
+
+    def test_position_finder_runs(self):
+        # aggressive + Pfind: merging always happens, the finder only places
+        # the compound task (§4.6.4); conservative + Pfind may legitimately
+        # cancel every merge at extreme oversubscription.
+        st = _run_video("aggressive", n=500, pf="linear")
+        st_log = _run_video("aggressive", n=500, pf="log")
+        assert st.merges > 0 and st_log.merges > 0
+
+
+class TestSimulatorPruning:
+    def test_pruning_improves_overloaded_msd(self):
+        wl = spiky_hc_workload(500, span=300.0, seed=5)
+        oracle = PETOracle(wl.pet, seed=2)
+
+        def go(prune):
+            sim = Simulator([copy.copy(t) for t in wl.tasks],
+                            [copy.deepcopy(m) for m in wl.machines],
+                            oracle,
+                            SimConfig(heuristic="MSD", pruning=prune,
+                                      hard_deadlines=True, seed=1))
+            return sim.run()
+
+        base = go(None)
+        pruned = go(PruningConfig(initial_defer_threshold=0.3))
+        assert pruned.robustness > base.robustness
+
+    def test_accounting_exact(self):
+        wl = spiky_hc_workload(300, span=200.0, seed=9)
+        sim = Simulator([copy.copy(t) for t in wl.tasks],
+                        [copy.deepcopy(m) for m in wl.machines],
+                        PETOracle(wl.pet, seed=2),
+                        SimConfig(heuristic="MM", hard_deadlines=True,
+                                  pruning=PruningConfig(), seed=1))
+        st = sim.run()
+        assert st.on_time + st.missed + st.dropped == st.n_requests == 300

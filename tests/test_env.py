@@ -1,0 +1,25 @@
+"""Environment invariants from the assignment."""
+
+import os
+
+
+def test_tests_see_one_device():
+    """Only the dry-run sets --xla_force_host_platform_device_count; the
+    test/bench processes must see the real single CPU device."""
+    if "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""):
+        import pytest
+        pytest.skip("caller explicitly forced a device count")
+    import jax
+    assert jax.device_count() == 1
+
+
+def test_mesh_module_import_touches_no_devices():
+    """mesh.py must define meshes as functions, not module constants."""
+    import importlib
+    import sys
+    for mod in ("repro.launch.mesh",):
+        sys.modules.pop(mod, None)
+        m = importlib.import_module(mod)
+        consts = [k for k, v in vars(m).items()
+                  if not k.startswith("_") and "Mesh" in type(v).__name__]
+        assert not consts, f"module-level mesh constants found: {consts}"
