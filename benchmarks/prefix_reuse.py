@@ -1,0 +1,120 @@
+"""Paged-KV prefix-reuse sweep: cache size x prompt-overlap skew.
+
+Uses the discrete-event simulator's analytical reuse model (DESIGN.md §2.4)
+so a thousand-task grid runs in milliseconds — no JAX.  Workloads draw a
+shared system prompt per request from a Zipf-skewed population (skewed =
+conversational/agent traffic hammering a few hot prompts; flat = every
+request nearly unique) and append a distinct user suffix.
+
+Emits ``BENCH_prefix_reuse.json`` at the repo root (consumed by
+``results/render_experiments.py``).
+
+    PYTHONPATH=src python -m benchmarks.prefix_reuse
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.simulation import PETOracle, SimConfig, Simulator
+from repro.core.tasks import Machine, PETMatrix, Task
+
+from .common import Csv
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                        "BENCH_prefix_reuse.json")
+
+CACHE_BLOCKS = (0, 8, 32, 128)
+ZIPF_SKEWS = (1.2, 1.6, 2.4)          # higher = hotter prompt population
+
+
+def _trace(n_tasks: int, zipf_a: float, n_prefixes: int = 16,
+           prefix_len: int = 64, suffix_len: int = 16, rate: float = 0.25,
+           deadline: float = 400.0, seed: int = 0) -> list[Task]:
+    rng = np.random.default_rng(seed)
+    prefixes = [tuple(rng.integers(0, 50000, size=prefix_len).tolist())
+                for _ in range(n_prefixes)]
+    out, t = [], 0.0
+    for i in range(n_tasks):
+        pi = min(int(rng.zipf(zipf_a)) - 1, n_prefixes - 1)
+        toks = prefixes[pi] + tuple(
+            rng.integers(0, 50000, size=suffix_len).tolist())
+        out.append(Task(ttype="generate", data_id=f"d{i}", op="generate",
+                        arrival=t, deadline=t + deadline, tokens=toks,
+                        user=f"u{i % 8}"))
+        t += float(rng.exponential(1.0 / rate))
+    return out
+
+
+def _cell(n_tasks: int, blocks: int, zipf_a: float, seed: int) -> dict:
+    rng = np.random.default_rng(99)
+    pet = PETMatrix.generate(["generate"], ["m0"], rng, mean_range=(15, 25))
+    sim = Simulator(_trace(n_tasks, zipf_a, seed=seed),
+                    [Machine(mid=i) for i in range(4)],
+                    PETOracle(pet, seed=seed + 1),
+                    SimConfig(heuristic="EDF", prefix_cache_blocks=blocks,
+                              kv_block_size=16))
+    st = sim.run()
+    return {
+        "cache_blocks": blocks,
+        "zipf_a": zipf_a,
+        "hit_rate": round(st.prefix_hit_rate, 4),
+        "tokens_reused": st.prefix_tokens_reused,
+        "time_saved": round(st.prefix_time_saved, 2),
+        "evictions": st.prefix_evictions,
+        "busy_time": round(st.busy_time, 2),
+        "miss_rate": round(st.miss_rate, 4),
+        "n_requests": st.n_requests,
+    }
+
+
+def run(csv: Csv, n_tasks: int = 600, seeds: tuple = (0,)) -> dict:
+    rows = []
+    for blocks in CACHE_BLOCKS:
+        for a in ZIPF_SKEWS:
+            cells = [_cell(n_tasks, blocks, a, s) for s in seeds]
+            row = {k: (float(np.mean([c[k] for c in cells]))
+                       if isinstance(cells[0][k], (int, float)) else cells[0][k])
+                   for k in cells[0]}
+            row["cache_blocks"], row["zipf_a"] = blocks, a
+            rows.append(row)
+            csv.add(f"prefix_b{blocks}_a{a}", hit_rate=row["hit_rate"],
+                    busy_time=row["busy_time"], miss_rate=row["miss_rate"],
+                    evictions=row["evictions"])
+
+    with open(OUT_PATH, "w") as f:
+        json.dump({"sweep": "cache_blocks x zipf_skew",
+                   "n_tasks": n_tasks, "rows": rows}, f, indent=1)
+
+    def sel(blocks, a):
+        return next(r for r in rows
+                    if r["cache_blocks"] == blocks and r["zipf_a"] == a)
+
+    biggest, smallest = max(CACHE_BLOCKS), min(b for b in CACHE_BLOCKS if b)
+    mid_skew = ZIPF_SKEWS[1]
+    checks = {
+        # any cache beats none on busy time (reuse is real work saved)
+        "cache_saves_time": all(
+            sel(biggest, a)["busy_time"] < sel(0, a)["busy_time"]
+            for a in ZIPF_SKEWS),
+        # capacity monotonicity at fixed skew
+        "bigger_cache_hits_more": (sel(biggest, mid_skew)["hit_rate"]
+                                   >= sel(smallest, mid_skew)["hit_rate"]),
+        # a small cache relies on skew: hot populations hit more
+        "skew_helps_small_cache": (sel(smallest, max(ZIPF_SKEWS))["hit_rate"]
+                                   >= sel(smallest, min(ZIPF_SKEWS))["hit_rate"]),
+        "tiny_cache_evicts": sel(smallest, mid_skew)["evictions"] > 0,
+    }
+    return checks
+
+
+if __name__ == "__main__":
+    csv = Csv("Prefix-reuse sweep (cache size x prompt skew)")
+    checks = run(csv)
+    csv.emit()
+    print(f"wrote {os.path.abspath(OUT_PATH)}")
+    for k, v in checks.items():
+        print(f"{'PASS' if v else 'FAIL'} {k}")

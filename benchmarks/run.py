@@ -25,6 +25,7 @@ MODULES = [
     ("pam", "Fig 5.15-5.19 PAM/PAMF + cost/energy"),
     ("pruning_overhead", "Fig 5.20 overhead mitigation + pmf_conv kernel"),
     ("serving", "Ch 6 SMSE serving prototype"),
+    ("prefix_reuse", "Prefix-reuse sweep (cache size x prompt skew)"),
     ("roofline", "Dry-run roofline table"),
 ]
 
@@ -54,6 +55,7 @@ def main(argv=None) -> int:
                     "pruning_overhead": {"load": 300},
                     "predictor": {"n_train": 2500, "n_test": 600},
                     "serving": {"n_requests": 30},
+                    "prefix_reuse": {"n_tasks": 250},
                     "merge_saving": {"n": 200},
                 }.get(name, {})
             checks = mod.run(csv, **kwargs) or {}

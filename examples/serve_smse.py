@@ -39,12 +39,17 @@ def main():
         max_len=64, batch_buckets=(1, 2, 4, 8)))
 
     rng = np.random.default_rng(0)
-    prompts = [tuple(rng.integers(1, cfg.vocab, size=12).tolist())
-               for _ in range(6)]
+    # shared-system-prompt traffic: a few hot >=32-token system prompts with
+    # distinct user suffixes — the paged KV prefix cache (DESIGN.md §2.4)
+    # prefills only the suffix after the first request per system prompt
+    sys_prompts = [tuple(rng.integers(1, cfg.vocab, size=32).tolist())
+                   for _ in range(4)]
     trace, t = [], 0.0
     for _ in range(args.requests):
+        prompt = sys_prompts[int(rng.integers(0, len(sys_prompts)))] + \
+            tuple(rng.integers(1, cfg.vocab, size=6).tolist())
         trace.append((t, Request(
-            prompt=prompts[int(rng.integers(0, len(prompts)))],
+            prompt=prompt,
             n_new=4, temperature=float(rng.choice([0.0, 0.0, 0.7])),
             seed=int(rng.integers(0, 3)), deadline=t + 400)))
         t += float(rng.exponential(5))
@@ -59,6 +64,9 @@ def main():
           f"executions)")
     print(f"merges             {stats['merges']}")
     print(f"result-cache hits  {stats['cache_hits']}")
+    print(f"prefix-cache hits  {stats['prefix_hits']} "
+          f"({stats['prefix_tokens_reused']} tokens reused; "
+          f"{stats['prefill_tokens']} prefilled)")
     print(f"dropped (pruned)   {stats['dropped']}")
     print(f"cold/warm starts   {stats['cold_starts']}/"
           f"{stats.get('warm_starts', 0)}")

@@ -76,6 +76,25 @@ def perf_table(rows, cell):
     return "\n".join(out)
 
 
+def prefix_cache_table(path="../BENCH_prefix_reuse.json"):
+    """Cache-hit-rate ladder from the prefix-reuse sweep (DESIGN.md §2.4)."""
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return "(run `python -m benchmarks.prefix_reuse` first)"
+    data = json.load(open(p))
+    out = ["| cache blocks | zipf skew | hit rate | tokens reused | "
+           "time saved | evictions | busy time | miss rate |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(data.get("rows", []),
+                    key=lambda r: (r["cache_blocks"], r["zipf_a"])):
+        out.append(
+            f"| {r['cache_blocks']:.0f} | {r['zipf_a']} "
+            f"| {r['hit_rate']:.3f} | {r['tokens_reused']:.0f} "
+            f"| {r['time_saved']:.0f} | {r['evictions']:.0f} "
+            f"| {r['busy_time']:.0f} | {r['miss_rate']:.3f} |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     cur = load("dryrun.jsonl")
     base = load("dryrun_baseline.jsonl")
@@ -89,3 +108,5 @@ if __name__ == "__main__":
     for cell in ("prefill", "decode", "xlstm"):
         print(f"\n## §Perf ladder — {cell}\n")
         print(perf_table(perf, cell))
+    print("\n## §Prefix cache — hit-rate sweep (cache size x prompt skew)\n")
+    print(prefix_cache_table())

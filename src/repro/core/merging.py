@@ -21,17 +21,30 @@ from dataclasses import dataclass, field
 
 from .tasks import Task
 
-__all__ = ["MergeLevel", "SimilarityDetector", "merge_tasks"]
+__all__ = ["MergeLevel", "SimilarityDetector", "merge_tasks",
+           "common_prefix_len"]
 
 
 class MergeLevel(enum.IntEnum):
     TASK = 3          # identical request — maximum reuse
     DATA_OP = 2       # same data + operation, different parameters
     DATA_ONLY = 1     # same data only
+    PREFIX = 0        # partial prompt overlap — cross-time paged-KV reuse
 
     @property
     def label(self) -> str:
-        return {3: "task", 2: "data_op", 1: "data_only"}[int(self)]
+        return {3: "task", 2: "data_op", 1: "data_only", 0: "prefix"}[int(self)]
+
+
+def common_prefix_len(a, b) -> int:
+    """Token-level longest-common-prefix length — the PREFIX similarity
+    score between two prompts (the hash tables can only see full-prompt
+    identity; partial overlap needs an elementwise walk or a trie)."""
+    n = min(len(a), len(b))
+    for i in range(n):
+        if a[i] != b[i]:
+            return i
+    return n
 
 
 @dataclass
@@ -43,6 +56,10 @@ class SimilarityDetector:
     _data_only: dict = field(default_factory=dict)
     # reverse index: tid -> [(table, key), ...] so completion cleanup is O(1)
     _owned_keys: dict = field(default_factory=dict)
+    # PREFIX level: a trie over token ids (duck-typed: needs ``match_len``;
+    # the serving engine attaches its paged-KV cache index here) scores
+    # *partial* overlap that the identity hash tables cannot see
+    prefix_index: object = None
 
     # -- lookup ---------------------------------------------------------------
     def find(self, task: Task) -> tuple[MergeLevel, Task] | None:
@@ -56,6 +73,18 @@ class SimilarityDetector:
             if hit is not None and hit.status == "queued" and hit.tid != task.tid:
                 return level, hit
         return None
+
+    def find_prefix_overlap(self, tokens) -> int:
+        """PREFIX-level similarity score: tokens of ``tokens`` covered by the
+        attached prefix index (0 without an index or below one block).
+
+        Unlike the three identity levels this does not name a live task to
+        merge *into* — the reuse target is cached KV from already-completed
+        work, so the admission gate uses the score to account/route reuse
+        rather than to build a compound task."""
+        if self.prefix_index is None or tokens is None or len(tokens) < 2:
+            return 0
+        return self.prefix_index.match_len(tokens, len(tokens) - 1)
 
     # -- Fig. 4.3 update procedure ---------------------------------------------
     def _tables_and_keys(self, task: Task):

@@ -118,6 +118,14 @@ class SimConfig:
     seed: int = 0
     alpha: float = 2.0                  # base worst-case coefficient (Eq. 4.1)
     merge_degree_cap: int = 5           # §3.2.2: little gain beyond 5
+    # analytical paged-KV prefix cache (DESIGN.md §2.4): tasks carrying
+    # ``tokens`` reuse the cached prefix and pay only the suffix's share of
+    # the prefill.  0 blocks = disabled.  The *same* admission/eviction
+    # machinery as the live engine runs here, payload-free, so cache-size x
+    # workload-skew sweeps don't need JAX.
+    prefix_cache_blocks: int = 0
+    kv_block_size: int = 16
+    prefill_fraction: float = 0.6       # share of exec time that is prefill
 
 
 @dataclass
@@ -136,6 +144,15 @@ class SimStats:
     per_type: dict = field(default_factory=dict)
     per_user_missrate: dict = field(default_factory=dict)
     deferred: int = 0
+    # paged-KV prefix reuse ----------------------------------------------------
+    prefix_hits: int = 0
+    prefix_tokens_reused: int = 0
+    prefix_evictions: int = 0
+    prefix_time_saved: float = 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(self.n_requests, 1)
 
     @property
     def miss_rate(self) -> float:
@@ -181,6 +198,14 @@ class Simulator:
         self._seq = itertools.count()
         self._events: list = []
         self._machine_epoch = {m.mid: 0 for m in machines}
+        self.kvcache = None
+        if self.cfg.prefix_cache_blocks > 0:
+            # lazy import: core stays importable without the serving package
+            from ..serving.kvcache import PrefixKVCache
+            self.kvcache = PrefixKVCache(self.cfg.prefix_cache_blocks,
+                                         self.cfg.kv_block_size,
+                                         clock_fn=lambda: self.now)
+            self.detector.prefix_index = self.kvcache.index
 
     # -- event plumbing -------------------------------------------------------
     def _push(self, t: float, kind: str, payload) -> None:
@@ -374,6 +399,7 @@ class Simulator:
                 self._account_drop(task)
                 continue
             dur = self.oracle.sample(task, m)
+            dur = self._apply_prefix_reuse(task, dur)
             task.status = "running"
             m.running = task
             m.run_end = self.now + dur
@@ -384,9 +410,40 @@ class Simulator:
             self.stats.energy += dur * m.power
             return
 
+    # -- analytical paged-KV prefix reuse (DESIGN.md §2.4) ---------------------
+    def _apply_prefix_reuse(self, task: Task, dur: float) -> float:
+        """Shrink ``dur`` by the prefill share covered by cached KV blocks.
+
+        Mirrors the live engine's lookup-pin-execute protocol: the matched
+        blocks stay pinned until the task finishes, so concurrent evictions
+        (other machines inserting) can never free KV this execution reads."""
+        if self.kvcache is None or not task.tokens:
+            return dur
+        toks = task.tokens
+        hit = self.kvcache.lookup(toks, max_tokens=len(toks) - 1)
+        task._prefix_hit = hit
+        if not hit:
+            return dur
+        saved = dur * self.cfg.prefill_fraction * hit.n_tokens / len(toks)
+        self.stats.prefix_hits += 1
+        self.stats.prefix_tokens_reused += hit.n_tokens
+        self.stats.prefix_time_saved += saved
+        return dur - saved
+
+    def _finish_prefix_reuse(self, task: Task) -> None:
+        if self.kvcache is None or not task.tokens:
+            return
+        self.kvcache.insert(task.tokens)
+        hit = getattr(task, "_prefix_hit", None)
+        if hit:
+            self.kvcache.release(hit)
+        self.stats.prefix_evictions = self.kvcache.stats["evictions"]
+
     def _handle_finish(self, m: Machine) -> float:
         task = m.running
         m.running = None
+        if task is not None:
+            self._finish_prefix_reuse(task)
         if task is not None:
             for r in task.all_requests():
                 r.status = "done"

@@ -30,6 +30,8 @@ class Task:
     deadline: float = float("inf")
     user: str = "u0"
     priority: int = 0
+    tokens: Optional[tuple] = None  # prompt token ids (prefix-reuse scoring);
+                                    # None for workloads without token detail
     tid: int = field(default_factory=lambda: next(_task_counter))
 
     # merging state --------------------------------------------------------

@@ -316,12 +316,17 @@ def decode_attention(q, k_cache, v_cache, length, window: int = 0):
 # ---------------------------------------------------------------------------
 
 def attention_apply(p, x, cfg, positions=None, kv_cache=None, length=None,
-                    kv_out: bool = False, memory=None):
+                    kv_out: bool = False, memory=None, prefix_kv=None,
+                    q_offset: int = 0):
     """GQA attention.
 
     * train/prefill: x (B,S,D); returns (out, (k,v) if kv_out)
     * decode:        x (B,1,D) with kv_cache=(k,v) (B,Smax,Hkv,hd), length (B,)
     * cross-attention: memory (B,Sm,D) — K/V from memory, no causal mask.
+    * cached prefill: prefix_kv=(pk,pv) (B,P,Hkv,hd) already-RoPE'd KV for a
+      reused prompt prefix; x holds only the suffix and ``q_offset=P`` places
+      it at the right absolute positions.  kv_out returns the *full-context*
+      (prefix+suffix) KV so decode continues as if the whole prompt ran.
     """
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -330,12 +335,22 @@ def attention_apply(p, x, cfg, positions=None, kv_cache=None, length=None,
     q = dense(p["wq"], x).reshape(b, s, h, hd)
     kv_src = memory if memory is not None else x
     if positions is None:
-        positions = jnp.arange(s)[None, :]
+        positions = jnp.arange(s)[None, :] + q_offset
 
     if kv_cache is None or memory is not None:
         k = dense(p["wk"], kv_src).reshape(b, kv_src.shape[1], hkv, hd)
         v = dense(p["wv"], kv_src).reshape(b, kv_src.shape[1], hkv, hd)
-        if memory is None:
+        if memory is None and prefix_kv is not None:
+            pk, pv = prefix_kv
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            k = jnp.concatenate([pk, k], axis=1)
+            v = jnp.concatenate([pv, v], axis=1)
+            kf = _repeat_kv(k, h // hkv)
+            vf = _repeat_kv(v, h // hkv)
+            q, kf, vf = map(pctx.shard_heads, (q, kf, vf))
+            out = full_attention(q, kf, vf, causal=True, q_offset=q_offset)
+        elif memory is None:
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
             kf = _repeat_kv(k, h // hkv)

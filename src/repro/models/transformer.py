@@ -665,3 +665,53 @@ def prefill_fn(cfg: ModelConfig, with_cache: bool = True):
         logits = hidden[:, -1] @ _unembed_matrix(cfg, params)
         return logits.astype(jnp.float32), cache
     return f
+
+
+def prefill_from_cache(cfg: ModelConfig):
+    """Returns f(params, batch, prefix_k, prefix_v, max_len) -> (logits, cache).
+
+    Prefill that *attaches to a cached prompt prefix* (the paged KV prefix
+    cache, DESIGN.md §2.4): ``batch["tokens"]`` holds only the uncached
+    suffix (B, S); ``prefix_k``/``prefix_v`` are (L, B, P, Hkv, hd) KV
+    tensors for the first P prompt tokens, exactly as a previous prefill
+    produced them (RoPE already applied at absolute positions 0..P-1).
+    Only the S suffix tokens pay compute; the returned cache covers the full
+    P+S context so ``decode_fn`` continues identically to a cold prefill.
+
+    Sequence-local attention families only (dense/vlm).  Recurrent-state
+    families have no position-indexed cache to attach to, and MoE routing is
+    sequence-global (expert capacity is shared across all prompt tokens, so
+    a suffix-only prefill drops different tokens than a cold prefill and
+    breaks the token-identical-reuse guarantee).
+    """
+    fam = cfg.family
+    if fam not in ("dense", "vlm"):
+        raise ValueError(f"prefix-cached prefill unsupported for family {fam}")
+
+    def pad_kv(kv, max_len):
+        pad = max_len - kv.shape[2]
+        return jnp.pad(kv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def f(params, batch, prefix_k, prefix_v, max_len: int):
+        x = embed(params["embed"], batch["tokens"]) if cfg.embed_inputs \
+            else batch["embeds"]
+        b, s = x.shape[0], x.shape[1]
+        p_len = prefix_k.shape[2]
+
+        def blk(h, inp):
+            lp, pk, pv = inp
+            a, kv = attention_apply(lp["attn"], rmsnorm(lp["ln1"], h), cfg,
+                                    kv_out=True, prefix_kv=(pk, pv),
+                                    q_offset=p_len)
+            h = h + a
+            h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], h))
+            return h, kv
+
+        hidden, (ks_, vs_) = lax.scan(blk, x,
+                                      (params["layers"], prefix_k, prefix_v))
+        cache = {"k": pad_kv(ks_, max_len), "v": pad_kv(vs_, max_len),
+                 "len": jnp.full((b,), p_len + s, jnp.int32)}
+        hidden = rmsnorm(params["final_ln"], hidden)
+        logits = hidden[:, -1] @ _unembed_matrix(cfg, params)
+        return logits.astype(jnp.float32), cache
+    return f

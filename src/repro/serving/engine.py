@@ -35,6 +35,7 @@ import numpy as np
 
 from ..core.appropriateness import VirtualQueueEvaluator
 from ..core.merging import MergeLevel, SimilarityDetector, merge_tasks
+from .kvcache import PrefixKVCache
 from ..core.oversubscription import adaptive_alpha, oversubscription_level
 from ..core.pmf import PMF
 from ..core.pruning import Pruner, PruningConfig
@@ -130,16 +131,22 @@ class ProcessingUnit:
         if shared_fns is not None:
             # warm start: reuse the engine's compiled executables (the
             # paper's warm container)
-            self._prefill, self._decode = shared_fns
+            self._prefill, self._decode, self._prefill_cached = shared_fns
         else:
             self._prefill = jax.jit(
                 lambda p, b: T.prefill_fn(model_cfg)(p, b, max_len))
             self._decode = jax.jit(T.decode_fn(model_cfg))
+            if model_cfg.family in ("dense", "vlm"):
+                self._prefill_cached = jax.jit(
+                    lambda p, b, pk, pv: T.prefill_from_cache(model_cfg)(
+                        p, b, pk, pv, max_len))
+            else:
+                self._prefill_cached = None
         self.warm = False
 
     @property
     def fns(self):
-        return (self._prefill, self._decode)
+        return (self._prefill, self._decode, self._prefill_cached)
 
     def warmup(self, prompt_len: int = 16, buckets=(1,)) -> float:
         """Compile prefill+decode for every batch bucket (the cold start)."""
@@ -153,18 +160,36 @@ class ProcessingUnit:
         return time.perf_counter() - t0
 
     def execute(self, task: Task, requests: list[Request],
-                rng: np.random.Generator, buckets=(1, 2, 4, 8)) -> float:
-        """Run the (possibly merged) task; returns wall seconds used.
+                rng: np.random.Generator, buckets=(1, 2, 4, 8),
+                prefix=None):
+        """Run the (possibly merged) task; returns (wall seconds, kv cache).
 
         Batch sizes are padded to fixed buckets so each (shape) executable
         compiles once (the per-shape compile is the serverless cold start;
-        re-use afterwards is the paper's warm container)."""
+        re-use afterwards is the paper's warm container).
+
+        ``prefix=(pk, pv)`` — host KV arrays (L, P, Hkv, hd) for the first P
+        prompt tokens from the paged prefix cache: only ``prompt[P:]`` is
+        prefilled, attached to the cached blocks (DESIGN.md §2.4).  The
+        returned cache dict lets the engine admit this prompt's KV back into
+        the cache (device->host transfer deferred to actually-new blocks)."""
         t0 = time.perf_counter()
         prompt = np.asarray(requests[0].prompt, np.int32)
         batch = len(requests)
         bucket = next((b for b in buckets if b >= batch), batch)
-        toks = jnp.asarray(np.tile(prompt[None, :], (bucket, 1)))
-        logits, cache = self._prefill(self.params, {"tokens": toks})
+        if prefix is not None:
+            pk, pv = prefix
+            plen = pk.shape[1]
+            toks = jnp.asarray(np.tile(prompt[None, plen:], (bucket, 1)))
+            pkb = jnp.broadcast_to(jnp.asarray(pk)[:, None],
+                                   (pk.shape[0], bucket) + pk.shape[1:])
+            pvb = jnp.broadcast_to(jnp.asarray(pv)[:, None],
+                                   (pv.shape[0], bucket) + pv.shape[1:])
+            logits, cache = self._prefill_cached(
+                self.params, {"tokens": toks}, pkb, pvb)
+        else:
+            toks = jnp.asarray(np.tile(prompt[None, :], (bucket, 1)))
+            logits, cache = self._prefill(self.params, {"tokens": toks})
         n_new = max((r.n_new for r in requests if r.op == "generate"),
                     default=0)
         cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -189,7 +214,7 @@ class ProcessingUnit:
                 r.tokens = outs[i]
             else:
                 r.logprobs = float(lp[i].max())
-        return time.perf_counter() - t0
+        return time.perf_counter() - t0, cache
 
 
 # ---------------------------------------------------------------------------
@@ -221,6 +246,17 @@ class EngineConfig:
     # model.  marginal=1.0 recovers raw CPU timing.
     batch_marginal_cost: float = 0.15
     batch_buckets: tuple = (1, 2, 4, 8)
+    # paged KV prefix cache (DESIGN.md §2.4): cross-request computational
+    # reuse — new requests prefill only the uncached suffix of their prompt.
+    # Sequence-local attention families only; silently off otherwise.
+    prefix_cache: bool = True
+    kv_block_size: int = 16            # tokens per cache block
+    kv_cache_blocks: int = 512         # preallocated pool slots
+    # cached-path prompt cap: the suffix prefill attends via reference
+    # full_attention (O(S^2) score tile per layer), which is fine at serving
+    # context lengths but a memory cliff at multi-k prompts — longer prompts
+    # take the cold tiled-flash path instead
+    prefix_max_prompt: int = 1024
 
 
 class ServingEngine:
@@ -242,7 +278,17 @@ class ServingEngine:
         self.cache: dict[tuple, list] = {}
         self.stats = {"completed": 0, "on_time": 0, "missed": 0, "merges": 0,
                       "cache_hits": 0, "dropped": 0, "cold_starts": 0,
-                      "scale_ups": 0, "scale_downs": 0, "executions": 0}
+                      "warm_starts": 0, "scale_ups": 0, "scale_downs": 0,
+                      "executions": 0, "prefix_hits": 0,
+                      "prefix_candidates": 0, "prefix_tokens_reused": 0,
+                      "prefill_tokens": 0}  # prefix_* mirrored from kvcache
+        self.kvcache = None
+        if cfg.prefix_cache and model_cfg.family in ("dense", "vlm"):
+            self.kvcache = PrefixKVCache(
+                cfg.kv_cache_blocks, cfg.kv_block_size,
+                value_fn=self._block_value, clock_fn=lambda: self.clock)
+            # PREFIX-level similarity scoring rides the same trie
+            self.detector.prefix_index = self.kvcache.index
         self._rng = np.random.default_rng(0)
         self._rid = 0
         self._misses_since_event = 0
@@ -261,7 +307,7 @@ class ServingEngine:
         if shared is None:
             self.stats["cold_starts"] += 1
         else:
-            self.stats["warm_starts"] = self.stats.get("warm_starts", 0) + 1
+            self.stats["warm_starts"] += 1
         # initial units are pre-warmed before traffic opens (the thesis's
         # SMSE starts its processing units ahead of the stream); cold/warm
         # start-up charges virtual time only for mid-run elastic scale-ups
@@ -307,8 +353,14 @@ class ServingEngine:
 
         task = Task(ttype=req.op, data_id=str(hash(req.prompt)), op=req.op,
                     params=req.params_sig, arrival=self.clock,
-                    deadline=req.deadline, user=f"u{req.rid % 8}")
+                    deadline=req.deadline, user=f"u{req.rid % 8}",
+                    tokens=req.prompt)
         task.queue_rank = self.clock
+        # PREFIX-level admission scoring: partial overlap with cached KV is
+        # reuse the hash-identity levels below cannot see
+        if self.kvcache is not None and \
+                self.detector.find_prefix_overlap(req.prompt) > 0:
+            self.stats["prefix_candidates"] += 1
         self.requests[task.tid] = [req]
         self.oracle.note_task(task.tid, len(req.prompt), req.n_new)
 
@@ -352,6 +404,25 @@ class ServingEngine:
         view.children = list(existing.children) + [task]
         cand = [view if t.tid == existing.tid else t for t in self.batch]
         return ev.count_misses(cand) <= base
+
+    # -- paged KV prefix cache (DESIGN.md §2.4) --------------------------------
+    def _block_value(self, blk, now: float) -> float:
+        """Expected residency value of a cached block: the TimeEstimator's
+        prefill-time estimate for the *prefix this block completes*
+        (depth * block_size tokens — what a hit that reaches it saves; a
+        deep block implies its whole ancestor chain got reused), weighted
+        by observed reuse and decayed by idle age — the pruning chapter's
+        "not worth pursuing" economics applied to cache eviction."""
+        mu, _ = self.estimator.mean_std(
+            "generate", max(blk.depth, 1) * blk.n_tokens, 1)
+        age = max(now - blk.last_used, 1.0)
+        return mu * (1.0 + blk.hits) / age
+
+    def _gather_prefix(self, hit):
+        """Concatenate pinned block payloads into (L, P, Hkv, hd) host KV."""
+        ks = [b.payload[0] for b in hit.blocks]
+        vs = [b.payload[1] for b in hit.blocks]
+        return np.concatenate(ks, axis=1), np.concatenate(vs, axis=1)
 
     # -- scheduling + execution ------------------------------------------------
     def _sync_machines(self):
@@ -403,6 +474,7 @@ class ServingEngine:
                 r.status = "dropped"
                 self.stats["dropped"] += 1
                 self.stats["missed"] += 1
+            self.oracle.forget(t.tid)
         self._misses_since_event += len(task.all_requests())
 
     def _run_units(self):
@@ -416,10 +488,32 @@ class ServingEngine:
             reqs = []
             for t in task.all_requests():
                 reqs += self.requests.pop(t.tid, [])
+                self.oracle.forget(t.tid)
             if not reqs:
                 continue
-            wall = unit.execute(task, reqs, self._rng,
-                                buckets=self.cfg.batch_buckets)
+            prompt = reqs[0].prompt
+            prefix, hit = None, None
+            reusable = (self.kvcache is not None and len(prompt) > 1
+                        and len(prompt) <= self.cfg.prefix_max_prompt)
+            if reusable:
+                # pin the cached prefix for the whole execution: blocks can
+                # never be evicted out from under a running prefill
+                hit = self.kvcache.lookup(prompt, max_tokens=len(prompt) - 1)
+                if hit:
+                    prefix = self._gather_prefix(hit)
+            self.stats["prefill_tokens"] += \
+                len(prompt) - (hit.n_tokens if hit else 0)
+            wall, kv_out = unit.execute(task, reqs, self._rng,
+                                        buckets=self.cfg.batch_buckets,
+                                        prefix=prefix)
+            if reusable and kv_out is not None and "k" in kv_out:
+                kk, vv = kv_out["k"], kv_out["v"]
+                self.kvcache.insert(
+                    prompt,
+                    lambda s0, s1: (np.asarray(kk[:, 0, s0:s1]),
+                                    np.asarray(vv[:, 0, s0:s1])))
+            if hit is not None and hit:
+                self.kvcache.release(hit)
             self.stats["executions"] += 1
             dur = wall * self.cfg.time_scale / m.speed
             # TPU batching economics: batch-k costs (1 + marginal*(k-1)),
@@ -473,7 +567,19 @@ class ServingEngine:
             self.clock = min(nexts) if nexts else self.clock + tick
             if idle_rounds > 10000:   # safety
                 break
-        return dict(self.stats)
+        out = dict(self.stats)
+        if self.kvcache is not None:
+            # the cache's own counters are authoritative — the engine only
+            # hand-maintains what the cache cannot see (prefill_tokens,
+            # prefix_candidates)
+            kv = self.kvcache.stats
+            out.update(prefix_hits=kv["hits"],
+                       prefix_tokens_reused=kv["tokens_reused"],
+                       prefix_lookups=kv["lookups"],
+                       prefix_inserts=kv["inserts"],
+                       prefix_evictions=kv["evictions"],
+                       prefix_blocks_used=self.kvcache.pool.n_used)
+        return out
 
 
 class _EngineOracle:
@@ -485,6 +591,11 @@ class _EngineOracle:
 
     def note_task(self, tid: int, prompt_len: int, n_new: int) -> None:
         self.dims[tid] = (prompt_len, n_new)
+
+    def forget(self, tid: int) -> None:
+        """Drop a completed/dropped task's entry so ``dims`` stays bounded
+        by the number of *live* tasks over arbitrarily long traces."""
+        self.dims.pop(tid, None)
 
     def _task_dims(self, task: Task) -> tuple[int, int, int]:
         reqs = task.all_requests()

@@ -5,8 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # minimal install: keep unit tests, skip property tests
+    from conftest import given, settings, st  # noqa: F401
 
 from repro.core.pmf import PMF, chance_of_success
 from repro.kernels.decode_attention.ops import decode_attention

@@ -1,0 +1,215 @@
+"""Paged KV prefix cache: pool/trie/facade invariants + the simulator's
+analytical reuse model.  No JAX — this subsystem must stay importable and
+testable on the pure-numpy simulation path."""
+
+import numpy as np
+import pytest
+
+from repro.core.merging import MergeLevel, common_prefix_len
+from repro.core.simulation import PETOracle, SimConfig, Simulator
+from repro.core.tasks import Machine, PETMatrix, Task
+from repro.serving.kvcache import BlockPool, PrefixIndex, PrefixKVCache
+
+
+# ---------------------------------------------------------------------------
+# block pool
+# ---------------------------------------------------------------------------
+
+class TestBlockPool:
+    def test_alloc_free_roundtrip(self):
+        pool = BlockPool(4, 16)
+        blk = pool.alloc(payload="kv")
+        assert pool.n_used == 1 and blk.payload == "kv"
+        pool.free(blk)
+        assert pool.n_used == 0 and blk.payload is None
+
+    def test_never_freed_while_referenced(self):
+        pool = BlockPool(2, 16)
+        blk = pool.alloc()
+        pool.incref(blk)
+        with pytest.raises(RuntimeError, match="referenced"):
+            pool.free(blk)
+        pool.decref(blk)
+        pool.free(blk)          # now legal
+
+    def test_double_free_and_stray_refs_rejected(self):
+        pool = BlockPool(2, 16)
+        blk = pool.alloc()
+        pool.free(blk)
+        with pytest.raises(RuntimeError, match="double free"):
+            pool.free(blk)
+        with pytest.raises(RuntimeError):
+            pool.incref(blk)
+        blk2 = pool.alloc()
+        with pytest.raises(RuntimeError):
+            pool.decref(blk2)
+
+    def test_exhaustion_returns_none(self):
+        pool = BlockPool(2, 16)
+        assert pool.alloc() is not None
+        assert pool.alloc() is not None
+        assert pool.alloc() is None
+
+
+# ---------------------------------------------------------------------------
+# prefix trie
+# ---------------------------------------------------------------------------
+
+class TestPrefixIndex:
+    def test_block_granular_match(self):
+        idx = PrefixIndex(4)
+        pool = BlockPool(8, 4)
+        toks = tuple(range(10))           # 2 whole blocks + 2-token tail
+        node = idx.root
+        for span in idx._spans(toks):
+            node = idx.extend(node, span, pool.alloc())
+        assert idx.match_len(toks) == 8   # tail fragment never indexed
+        assert idx.match_len(toks[:7]) == 4
+        assert idx.match_len((99,) + toks[1:]) == 0
+        assert idx.match_len(toks, max_tokens=7) == 4
+
+    def test_remove_leaf_only(self):
+        idx = PrefixIndex(2)
+        pool = BlockPool(4, 2)
+        a = idx.extend(idx.root, (1, 2), pool.alloc())
+        b = idx.extend(a, (3, 4), pool.alloc())
+        with pytest.raises(RuntimeError):
+            idx.remove(a)                 # internal node
+        idx.remove(b)
+        idx.remove(a)                     # now a leaf
+        assert len(idx) == 0
+
+
+# ---------------------------------------------------------------------------
+# cache facade
+# ---------------------------------------------------------------------------
+
+class TestPrefixKVCache:
+    def test_lookup_insert_shared_prefix(self):
+        c = PrefixKVCache(16, 4)
+        sys_p = tuple(range(8))
+        c.insert(sys_p + (50, 51, 52, 53))
+        c.insert(sys_p + (60, 61, 62, 63))
+        # the shared 8-token prefix is stored once: 2 + 1 + 1 blocks
+        assert c.pool.n_used == 4
+        hit = c.lookup(sys_p + (70, 71, 72, 73))
+        assert hit.n_tokens == 8
+        c.release(hit)
+
+    def test_lookup_pins_blocks_against_eviction(self):
+        c = PrefixKVCache(2, 4)
+        p1 = tuple(range(8))              # fills the pool
+        c.insert(p1)
+        hit = c.lookup(p1, max_tokens=len(p1) - 1)
+        assert hit.n_tokens == 4          # capped to leave a suffix
+        # p1's unpinned tail block is evictable, the pinned head is not: a
+        # conflicting insert admits one block then gets rejected, and must
+        # never free KV the outstanding hit is reading
+        p2 = (99,) + tuple(range(100, 107))
+        assert c.insert(p2) == 1
+        assert c.stats["rejected"] == 1
+        assert c.peek(p1) == 4            # pinned head survived
+        assert hit.blocks[0].in_use and hit.blocks[0].refcount == 1
+        c.release(hit)
+        assert c.insert(p2) == 1          # evictable now
+        assert c.stats["evictions"] == 2
+        assert c.peek(p2) == 8
+
+    def test_release_makes_hit_inert(self):
+        c = PrefixKVCache(4, 4)
+        c.insert(tuple(range(8)))
+        hit = c.lookup(tuple(range(8)))
+        c.release(hit)
+        assert not hit and hit.blocks == []
+        assert all(b.refcount == 0 for b in c.pool.blocks)
+
+    def test_eviction_prefers_low_value(self):
+        now = [0.0]
+        c = PrefixKVCache(2, 4, clock_fn=lambda: now[0])
+        c.insert(tuple(range(4)))         # block A at t=0
+        now[0] = 100.0
+        c.insert(tuple(range(100, 104)))  # block B at t=100
+        h = c.lookup(tuple(range(100, 104)))   # B hit: more valuable
+        c.release(h)
+        now[0] = 101.0
+        c.insert(tuple(range(200, 204)))  # must evict stale A, not hot B
+        assert c.peek(tuple(range(100, 104))) == 4
+        assert c.peek(tuple(range(4))) == 0
+
+    def test_insert_larger_than_pool(self):
+        c = PrefixKVCache(3, 2)
+        added = c.insert(tuple(range(10)))     # 5 spans, 3 slots
+        assert added == 3                      # strict left-to-right prefix
+        assert c.peek(tuple(range(10))) == 6
+
+    def test_payload_fn_called_only_for_new_blocks(self):
+        calls = []
+        c = PrefixKVCache(8, 4)
+        c.insert(tuple(range(8)), lambda s, e: calls.append((s, e)))
+        c.insert(tuple(range(12)), lambda s, e: calls.append((s, e)))
+        assert calls == [(0, 4), (4, 8), (8, 12)]
+
+
+# ---------------------------------------------------------------------------
+# PREFIX merge level
+# ---------------------------------------------------------------------------
+
+def test_prefix_merge_level():
+    assert MergeLevel.PREFIX < MergeLevel.DATA_ONLY
+    assert MergeLevel.PREFIX.label == "prefix"
+    assert common_prefix_len((1, 2, 3, 4), (1, 2, 9)) == 2
+    assert common_prefix_len((1, 2), (1, 2, 3)) == 2
+    assert common_prefix_len((9,), (1,)) == 0
+
+
+# ---------------------------------------------------------------------------
+# simulator analytical model
+# ---------------------------------------------------------------------------
+
+def _prefix_tasks(n=200, n_prefixes=6, seed=0):
+    rng = np.random.default_rng(seed)
+    prefixes = [tuple(rng.integers(0, 1000, size=48).tolist())
+                for _ in range(n_prefixes)]
+    out, t = [], 0.0
+    for i in range(n):
+        pi = min(int(rng.zipf(1.5)) - 1, n_prefixes - 1)
+        toks = prefixes[pi] + tuple(rng.integers(0, 1000, size=16).tolist())
+        out.append(Task(ttype="generate", data_id=f"d{i}", op="generate",
+                        arrival=t, deadline=t + 400, tokens=toks))
+        t += float(rng.exponential(4))
+    return out
+
+
+def _run_sim(blocks, seed=0):
+    rng = np.random.default_rng(7)
+    pet = PETMatrix.generate(["generate"], ["m0"], rng, mean_range=(15, 25))
+    sim = Simulator(_prefix_tasks(seed=seed),
+                    [Machine(mid=i) for i in range(3)],
+                    PETOracle(pet, seed=3),
+                    SimConfig(prefix_cache_blocks=blocks, kv_block_size=16))
+    return sim.run()
+
+
+class TestSimulatorPrefixReuse:
+    def test_disabled_by_default(self):
+        st = _run_sim(0)
+        assert st.prefix_hits == 0 and st.prefix_time_saved == 0.0
+
+    def test_reuse_saves_time_and_scales_with_capacity(self):
+        st0 = _run_sim(0)
+        st_small = _run_sim(8)
+        st_big = _run_sim(128)
+        assert st_small.prefix_hits > 0
+        assert st_big.prefix_hits >= st_small.prefix_hits
+        assert st_big.busy_time < st_small.busy_time < st0.busy_time
+        assert st_small.prefix_evictions > 0
+        assert st_big.prefix_tokens_reused >= st_small.prefix_tokens_reused
+
+    def test_no_dangling_refs_after_run(self):
+        rng = np.random.default_rng(7)
+        pet = PETMatrix.generate(["generate"], ["m0"], rng)
+        sim = Simulator(_prefix_tasks(n=80), [Machine(mid=0)],
+                        PETOracle(pet, seed=3),
+                        SimConfig(prefix_cache_blocks=16, kv_block_size=16))
+        sim.run()
+        assert all(b.refcount == 0 for b in sim.kvcache.pool.blocks)

@@ -1,0 +1,191 @@
+"""SMSE serving-engine coverage: merge-level semantics, result-cache path,
+and the paged KV prefix cache end to end (hit/evict/refcount + the
+token-identity and fewer-prefill-tokens acceptance criteria)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models import transformer as T
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _model(vocab=128):
+    cfg = ARCHS["smollm-360m"].reduced().scaled(
+        n_layers=1, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+        vocab=vocab, head_dim=32, remat=False)
+    return cfg, T.init_params(cfg, KEY)
+
+
+_CFG, _PARAMS = _model()
+
+
+def _engine(**kw):
+    kw.setdefault("n_units", 1)
+    kw.setdefault("max_units", 1)
+    kw.setdefault("elastic", False)
+    kw.setdefault("merging", "none")
+    kw.setdefault("pruning", None)
+    kw.setdefault("result_cache", False)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("batch_buckets", (1, 2, 4))
+    return ServingEngine(_CFG, _PARAMS, EngineConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# merge levels
+# ---------------------------------------------------------------------------
+
+class TestMergeLevels:
+    def test_task_level_fanout_identical_tokens(self):
+        """Identical (prompt, op, params): one execution serves everyone."""
+        eng = _engine(merging="aggressive")
+        p = (3, 1, 4, 1, 5, 9, 2, 6)
+        reqs = [Request(prompt=p, n_new=3, seed=0, deadline=1e9)
+                for _ in range(4)]
+        stats = eng.run([(0.0, r) for r in reqs])
+        assert stats["executions"] == 1
+        assert stats["merges"] == 3
+        assert len(reqs[0].tokens) == 3
+        assert all(r.tokens == reqs[0].tokens for r in reqs)
+
+    def test_data_op_respects_per_request_n_new(self):
+        """Same prompt + op, different params: shared prefill, each request
+        still gets exactly its own n_new tokens."""
+        eng = _engine(merging="aggressive")
+        p = (7, 8, 9, 10, 11)
+        r1 = Request(prompt=p, n_new=4, seed=0, deadline=1e9)
+        r2 = Request(prompt=p, n_new=2, seed=1, deadline=1e9)
+        r3 = Request(prompt=p, n_new=1, seed=2, deadline=1e9)
+        stats = eng.run([(0.0, r1), (0.0, r2), (0.0, r3)])
+        assert stats["executions"] == 1
+        assert [len(r.tokens) for r in (r1, r2, r3)] == [4, 2, 1]
+        # greedy portions agree with the longest request's trajectory
+        assert r2.tokens == r1.tokens[:2] and r3.tokens == r1.tokens[:1]
+
+
+# ---------------------------------------------------------------------------
+# result cache
+# ---------------------------------------------------------------------------
+
+class TestResultCache:
+    def test_hit_path_serves_without_execution(self):
+        eng = _engine(result_cache=True)
+        p = (1, 2, 3, 4, 5, 6)
+        r1 = Request(prompt=p, n_new=2, deadline=1e9)
+        eng.run([(0.0, r1)])
+        execs = eng.stats["executions"]
+        r2 = Request(prompt=p, n_new=2, deadline=1e9)
+        eng.run([(eng.clock, r2)])
+        assert eng.stats["executions"] == execs      # no new execution
+        assert eng.stats["cache_hits"] == 1
+        assert r2.status == "done" and r2.tokens == r1.tokens
+
+    def test_param_mismatch_misses(self):
+        eng = _engine(result_cache=True)
+        p = (1, 2, 3, 4, 5, 6)
+        r1 = Request(prompt=p, n_new=2, deadline=1e9)
+        eng.run([(0.0, r1)])
+        r2 = Request(prompt=p, n_new=3, deadline=1e9)   # different params
+        eng.run([(eng.clock, r2)])
+        assert eng.stats["cache_hits"] == 0
+        assert eng.stats["executions"] == 2
+
+
+# ---------------------------------------------------------------------------
+# paged KV prefix cache (the acceptance workload)
+# ---------------------------------------------------------------------------
+
+def _shared_prefix_trace(n=64, n_sys=8, sys_len=64, suffix_len=8, seed=0):
+    """64 requests over 8 distinct >=64-token system prompts with distinct
+    user suffixes — the issue's acceptance workload."""
+    rng = np.random.default_rng(seed)
+    sys_prompts = [tuple(rng.integers(1, _CFG.vocab, size=sys_len).tolist())
+                   for _ in range(n_sys)]
+    out = []
+    for i in range(n):
+        p = sys_prompts[i % n_sys] + \
+            tuple(rng.integers(1, _CFG.vocab, size=suffix_len).tolist())
+        out.append((0.0, Request(prompt=p, n_new=2, deadline=1e9)))
+    return out
+
+
+class TestPrefixCache:
+    def test_acceptance_shared_prefix_workload(self):
+        """>0 prefix hits, token-identical to a cache-disabled run, and
+        measurably fewer prefill tokens executed."""
+        tr_on = _shared_prefix_trace()
+        eng_on = _engine(prefix_cache=True, kv_block_size=16,
+                         kv_cache_blocks=128)
+        s_on = eng_on.run(tr_on)
+
+        tr_off = _shared_prefix_trace()
+        eng_off = _engine(prefix_cache=False)
+        s_off = eng_off.run(tr_off)
+
+        assert s_on["prefix_hits"] > 0
+        assert s_on["prefill_tokens"] < s_off["prefill_tokens"]
+        assert s_on["prefix_tokens_reused"] > 0
+        assert s_on["completed"] == s_off["completed"] == 64
+        toks_on = [r.tokens for _, r in tr_on]
+        toks_off = [r.tokens for _, r in tr_off]
+        assert toks_on == toks_off
+        # every request after the first per system prompt reuses >= 64 tokens
+        assert s_on["prefix_hits"] == 64 - 8
+        assert s_on["prefix_tokens_reused"] == (64 - 8) * 64
+
+    def test_eviction_under_tiny_pool_keeps_results_exact(self):
+        """A pool far smaller than the working set must evict (never a
+        pinned block) and still produce exact results."""
+        tr = _shared_prefix_trace(n=24, n_sys=4)
+        eng = _engine(prefix_cache=True, kv_block_size=16, kv_cache_blocks=6)
+        s = eng.run(tr)
+        assert s["prefix_evictions"] > 0
+        assert s["completed"] == 24
+        assert all(b.refcount == 0 for b in eng.kvcache.pool.blocks)
+
+        tr_off = _shared_prefix_trace(n=24, n_sys=4)
+        eng_off = _engine(prefix_cache=False)
+        eng_off.run(tr_off)
+        assert [r.tokens for _, r in tr] == [r.tokens for _, r in tr_off]
+
+    def test_refcount_invariant_during_run(self):
+        """Pool-level guard: freeing a referenced block raises, and the
+        engine never trips it across a full eviction-heavy trace."""
+        eng = _engine(prefix_cache=True, kv_block_size=16, kv_cache_blocks=4)
+        eng.run(_shared_prefix_trace(n=16, n_sys=4))
+        pool = eng.kvcache.pool
+        blk = next(b for b in pool.blocks if b.in_use)
+        pool.incref(blk)
+        with pytest.raises(RuntimeError, match="referenced"):
+            pool.free(blk)
+        pool.decref(blk)
+
+    def test_prefix_candidates_scored_on_submit(self):
+        """PREFIX-level similarity is visible to the admission gate once the
+        cache holds a matching prefix."""
+        sys_p = tuple(range(1, 33))
+        eng = _engine(prefix_cache=True, kv_block_size=16,
+                      kv_cache_blocks=16)
+        r1 = Request(prompt=sys_p + (40, 41), n_new=1, deadline=1e9)
+        eng.run([(0.0, r1)])
+        r2 = Request(prompt=sys_p + (50, 51), n_new=1, deadline=1e9)
+        eng.run([(eng.clock, r2)])
+        assert eng.stats["prefix_candidates"] == 1
+        assert eng.detector.find_prefix_overlap(sys_p + (60,)) == 32
+
+    def test_disabled_for_stateful_families(self):
+        cfg = ARCHS["xlstm-125m"].reduced().scaled(
+            n_layers=2, d_model=64, n_heads=2, remat=False)
+        params = T.init_params(cfg, KEY)
+        eng = ServingEngine(cfg, params, EngineConfig(
+            n_units=1, max_units=1, elastic=False, merging="none",
+            pruning=None, result_cache=False, max_len=48,
+            batch_buckets=(1,), prefix_cache=True))
+        assert eng.kvcache is None
+        r = Request(prompt=tuple(range(1, 20)), n_new=2, deadline=1e9)
+        stats = eng.run([(0.0, r)])
+        assert stats["completed"] == 1 and len(r.tokens) == 2
