@@ -49,7 +49,6 @@ def run(csv: Csv, n_train: int = 5000, n_test: int = 1200,
     mlp = MLPPredictor(steps=500).fit(X, y)
     csv.add("gbdt_fit", us_per_call=us_fit)
 
-    degrees = X[:, 5:8].sum(axis=1) + X[:, 8:11].sum(axis=1)
     degrees_t = Xt[:, 5:8].sum(axis=1) + Xt[:, 8:11].sum(axis=1)
     accs = {}
     for tau in (0.12, 0.08):

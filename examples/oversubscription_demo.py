@@ -12,8 +12,6 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np  # noqa: E402
-
 from repro.core.oversubscription import adaptive_alpha  # noqa: E402
 from repro.core.pruning import PruningConfig  # noqa: E402
 from repro.core.simulation import PETOracle, SimConfig, Simulator  # noqa: E402
@@ -21,19 +19,22 @@ from repro.core.workload import spiky_hc_workload  # noqa: E402
 
 
 class InstrumentedSim(Simulator):
+    """Samples the control-plane signals after every 40th mapping event
+    (the ``after_mapping`` observer hook — no loop subclassing needed)."""
+
     def __init__(self, *a, **kw):
         super().__init__(*a, **kw)
         self.trace = []
+        self.cp.after_mapping = self._observe
 
-    def _mapping_event(self):
-        super()._mapping_event()
-        if self.pruner is not None and self.stats.mapping_events % 40 == 0:
+    def _observe(self, cp):
+        if cp.pruner is not None and cp.stats["mapping_events"] % 40 == 0:
             self.trace.append({
-                "t": round(self.now, 1),
-                "queue": len(self.batch),
-                "ewma_misses": round(self.pruner.toggle.d, 2),
-                "dropping": self.pruner.toggle.engaged,
-                "defer_thr": round(self.pruner.defer_threshold, 2),
+                "t": round(cp.now, 1),
+                "queue": len(cp.batch),
+                "ewma_misses": round(cp.pruner.toggle.d, 2),
+                "dropping": cp.pruner.toggle.engaged,
+                "defer_thr": round(cp.pruner.defer_threshold, 2),
             })
 
 

@@ -95,6 +95,25 @@ def prefix_cache_table(path="../BENCH_prefix_reuse.json"):
     return "\n".join(out)
 
 
+def serving_control_plane_table(path="../BENCH_serving.json"):
+    """Scheduler overhead + QoS of the event-driven control plane on a
+    bursty trace (stub-execution engine; benchmarks/serving.py)."""
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return "(run `python -m benchmarks.run --only serving` first)"
+    data = json.load(open(p))
+    out = ["| config | requests | mapping events | us/mapping event | "
+           "miss rate | merges | deferred | dropped | deadlock breaks |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in data.get("rows", []):
+        out.append(
+            f"| {r['config']} | {r['requests']} | {r['mapping_events']} "
+            f"| {r['us_per_mapping_event']:.1f} | {r['miss_rate']:.3f} "
+            f"| {r['merges']} | {r['deferred']} | {r['dropped']} "
+            f"| {r['deadlock_breaks']} |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     cur = load("dryrun.jsonl")
     base = load("dryrun_baseline.jsonl")
@@ -110,3 +129,5 @@ if __name__ == "__main__":
         print(perf_table(perf, cell))
     print("\n## §Prefix cache — hit-rate sweep (cache size x prompt skew)\n")
     print(prefix_cache_table())
+    print("\n## §Control plane — event-driven scheduler on a bursty trace\n")
+    print(serving_control_plane_table())

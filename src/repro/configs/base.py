@@ -7,7 +7,7 @@ plain frozen dataclasses so they hash (usable as jit static args).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

@@ -19,12 +19,16 @@ probing* and *linear probing*.
 
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass
 from typing import Callable
 
+from .merging import MergeLevel
+from .oversubscription import adaptive_alpha, oversubscription_level
 from .tasks import Machine, Task
 
-__all__ = ["VirtualQueueEvaluator", "PositionFinder", "MergeDecision"]
+__all__ = ["VirtualQueueEvaluator", "PositionFinder", "MergeDecision",
+           "MergeGate", "shallow_merged_view"]
 
 # exec_time(task, machine) -> (mu, sigma); merged tasks included
 ExecTimeFn = Callable[[Task, Machine], tuple[float, float]]
@@ -81,7 +85,6 @@ class VirtualQueueEvaluator:
         completions = self.replay(batch)
         # queued-on-machine tasks can also miss; include them
         misses = 0
-        avail = self._machine_avail()  # completion of machine-queued work
         for m in self.machines:
             t = max(self.now, m.run_end if m.running else self.now)
             for q in m.queue:
@@ -161,3 +164,78 @@ class PositionFinder:
         # Phase 2: verify tasks behind the insertion are unharmed.
         _, others_ok = self._probe(queue, merged, best_pos, base_misses)
         return best_pos if others_ok else None
+
+
+def shallow_merged_view(existing: Task, arriving: Task) -> Task:
+    """A copy of ``existing`` with ``arriving`` merged in, for what-if
+    evaluation without mutating live state."""
+    view = copy.copy(existing)
+    view.children = list(existing.children) + [arriving]
+    return view
+
+
+def _by_rank(task: Task) -> float:
+    return task.queue_rank if task.queue_rank is not None else task.arrival
+
+
+class MergeGate:
+    """Merge-appropriateness policy (Section 4.4) behind one call.
+
+    Owns the full decision ladder shared by the simulator and the serving
+    engine: TASK-level merges are free; ``aggressive`` always merges (the
+    position finder, when configured, still *places* the compound task);
+    ``conservative`` evaluates the virtual queue at the base ``alpha``;
+    ``adaptive`` first relaxes ``alpha`` by the oversubscription level
+    (Section 4.5.3).  With a position finder the decision is positional:
+    merge only if a queue slot exists where neither the compound task nor
+    the tasks behind it miss more deadlines (Section 4.4.5).
+    """
+
+    def __init__(self, policy: str, alpha: float = 2.0,
+                 position_finder: str | None = None):
+        if position_finder not in (None, "linear", "log"):
+            raise ValueError(f"unknown position finder {position_finder!r}")
+        self.policy = policy
+        self.alpha = alpha
+        self.position_finder = position_finder
+
+    def _find_position(self, pf: PositionFinder, batch: list[Task],
+                       existing: Task, cand: Task, base: int) -> int | None:
+        rest = sorted((t for t in batch if t.tid != existing.tid), key=_by_rank)
+        return (pf.linear(rest, cand, base) if self.position_finder == "linear"
+                else pf.logarithmic(rest, cand, base))
+
+    def evaluate(self, existing: Task, arriving: Task, level: MergeLevel,
+                 batch: list[Task], machines: list[Machine],
+                 exec_time: ExecTimeFn, now: float) -> MergeDecision:
+        if level is MergeLevel.TASK:
+            # identical request: free reuse, no side effect
+            return MergeDecision(True, None, 0, "task-level")
+        if self.policy == "aggressive":
+            pos = None
+            if self.position_finder:
+                # aggressive merging ignores appropriateness (§4.6.1); the
+                # finder is still consulted to *place* the compound task
+                ev = VirtualQueueEvaluator(machines, exec_time, now=now,
+                                           alpha=self.alpha)
+                base = ev.count_misses(batch + [arriving])
+                cand = shallow_merged_view(existing, arriving)
+                pos = self._find_position(PositionFinder(ev), batch,
+                                          existing, cand, base)
+            return MergeDecision(True, pos, 0, "aggressive")
+        alpha = self.alpha
+        if self.policy == "adaptive":
+            osl = oversubscription_level(machines, exec_time, now)
+            alpha = adaptive_alpha(osl)
+        ev = VirtualQueueEvaluator(machines, exec_time, now=now, alpha=alpha)
+        base = ev.count_misses(batch + [arriving])
+        cand = shallow_merged_view(existing, arriving)
+        if self.position_finder and any(t.tid == existing.tid for t in batch):
+            pos = self._find_position(PositionFinder(ev), batch, existing,
+                                      cand, base)
+            if pos is None:
+                return MergeDecision(False, None, 0, "no viable position")
+            return MergeDecision(True, pos, 0, "position found")
+        cand_queue = [cand if t.tid == existing.tid else t for t in batch]
+        delta = ev.count_misses(cand_queue) - base
+        return MergeDecision(delta <= 0, None, delta, "virtual-queue replay")

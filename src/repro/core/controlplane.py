@@ -1,0 +1,405 @@
+"""Unified scheduling control plane (Figs. 4.2/5.2/5.5 as *one* loop).
+
+The dissertation's resource-allocation system is a single architecture —
+admission control (similarity detection + merge appropriateness + position
+finding), a batch queue, a pluggable mapping heuristic with the
+probabilistic pruning mechanism, and drop/departure bookkeeping — evaluated
+either *analytically* (the discrete-event simulator) or against *live
+executions* (the SMSE serving engine).  This module is that architecture,
+written once: ``ControlPlane`` owns the event-driven clock (a heapq of
+arrival/finish/wake events — no fixed-tick polling anywhere), the batch
+queue and every scheduling decision, and is parameterized by a small
+``Substrate`` that supplies machines, an execution-time oracle, and the
+execute/complete/drop side effects.
+
+Decision parity between substrates is a correctness property (the merging
+and pruning literature requires analytical and live evaluations to agree):
+``ControlPlane.trace``, when set to a list, records the admission / merge /
+map / start / drop / finish decision sequence in substrate-independent form
+so tests can assert the simulator and a stub-execution engine behave
+identically on the same trace and oracle.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass
+
+from .appropriateness import MergeGate
+from .heuristics import MappingContext, make_heuristic
+from .merging import SimilarityDetector, merge_tasks
+from .pruning import Pruner, PruningConfig
+from .tasks import Machine, Task
+
+__all__ = ["ControlConfig", "ControlPlane", "Substrate"]
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ControlConfig:
+    """Scheduling policy shared by every substrate."""
+
+    heuristic: str = "FCFS-RR"
+    merging: str = "none"               # none|conservative|aggressive|adaptive
+    position_finder: str | None = None  # None|"linear"|"log"
+    pruning: PruningConfig | None = None
+    hard_deadlines: bool = False        # purge/cull tasks past their deadline
+    alpha: float = 2.0                  # base worst-case coefficient (Eq. 4.1)
+    merge_degree_cap: int = 5           # §3.2.2: little gain beyond 5
+
+
+# ---------------------------------------------------------------------------
+# substrate protocol
+# ---------------------------------------------------------------------------
+
+class Substrate:
+    """What the control plane needs from its execution environment.
+
+    The simulator implements this with an execution-time oracle and no
+    payloads; the serving engine with real compiled JAX executables on
+    processing units.  ``machines`` may change between calls (elasticity).
+    """
+
+    #: ExecOracle view used for merging/pruning math: any object with
+    #: ``mean_std(task, machine)`` and ``pmf(task, machine)``.
+    oracle = None
+
+    #: live machine pool — an attribute or property on the concrete
+    #: substrate; may change between accesses (elasticity)
+    machines: list = ()
+
+    def ingest(self, item, now: float) -> Task | None:
+        """Convert an arrival payload into a Task, or serve it without
+        scheduling (result cache) and return None."""
+        raise NotImplementedError
+
+    def begin_execution(self, task: Task, machine: Machine,
+                        now: float) -> float:
+        """Run (or start) ``task`` on ``machine``; return its duration in
+        control-plane time units."""
+        raise NotImplementedError
+
+    def finish_execution(self, task: Task, machine: Machine,
+                         now: float) -> int:
+        """Completion bookkeeping; return the number of requests that
+        missed their deadline (drives the pruner's EWMA toggle)."""
+        raise NotImplementedError
+
+    def on_drop(self, task: Task, now: float) -> None:
+        """Account every request of a culled/pruned task as dropped."""
+        raise NotImplementedError
+
+    # -- optional hooks ------------------------------------------------------
+    def before_mapping(self, now: float) -> None:
+        """Runs at the top of every mapping event (elasticity lives here)."""
+
+    def merge_viable(self, existing: Task) -> bool:
+        """Substrate veto on merging into ``existing`` (engine: its requests
+        must still be queued)."""
+        return True
+
+    def on_merge(self, existing: Task, arriving: Task, level) -> None:
+        """Bookkeeping after ``arriving`` merged into ``existing``."""
+
+
+# ---------------------------------------------------------------------------
+# the control plane
+# ---------------------------------------------------------------------------
+
+class ControlPlane:
+    """One admission/merge/prune/map/execute loop over a ``Substrate``."""
+
+    def __init__(self, substrate: Substrate, cfg: ControlConfig | None = None,
+                 now: float = 0.0):
+        self.sub = substrate
+        self.cfg = cfg or ControlConfig()
+        self.now = now
+        self.batch: list[Task] = []
+        self.heuristic = make_heuristic(self.cfg.heuristic)
+        self.detector = SimilarityDetector()
+        self.gate = MergeGate(self.cfg.merging, alpha=self.cfg.alpha,
+                              position_finder=self.cfg.position_finder)
+        self.pruner = (Pruner(substrate.oracle, self.cfg.pruning)
+                       if self.cfg.pruning is not None else None)
+        self.stats = {"merges": 0, "merge_rejected": 0, "mapping_events": 0,
+                      "deferred": 0, "dropped_requests": 0,
+                      "deadlock_breaks": 0, "last_completion": 0.0,
+                      "mapping_wall_s": 0.0}
+        #: set to a list to record the decision sequence (see module doc)
+        self.trace: list | None = None
+        #: optional callable(cp) invoked after every mapping event
+        self.after_mapping = None
+        self._events: list = []
+        self._seq = itertools.count()
+        self._epoch: dict[int, int] = {}
+        self._misses_since_event = 0
+        self._arrival_index: dict[int, int] = {}
+        self._n_arrivals = 0
+
+    # -- event plumbing -------------------------------------------------------
+    def _push(self, t: float, kind: str, payload=None) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def schedule_arrival(self, t: float, item) -> None:
+        self._push(t, "arrive", item)
+
+    def wake_at(self, t: float) -> None:
+        """Request a mapping event at time ``t`` (elasticity, external
+        state changes)."""
+        self._push(t, "wake")
+
+    def note_warmup(self, machine: Machine, until: float) -> None:
+        """Mark ``machine`` busy warming up until ``until``: estimators see
+        a running placeholder, and a wake event fires when it ends."""
+        machine.running = Task.warmup_placeholder(self.now)
+        machine.run_end = machine.busy_until = until
+        self._push(until, "warm", machine.mid)
+
+    def _machine(self, mid: int) -> Machine | None:
+        for m in self.sub.machines:
+            if m.mid == mid:
+                return m
+        return None
+
+    def _log(self, *entry) -> None:
+        if self.trace is not None:
+            self.trace.append(entry)
+
+    def _index(self, task: Task) -> int:
+        """Substrate-independent task identity: arrival ordinal."""
+        return self._arrival_index.get(task.tid, -1)
+
+    # -- the event loop -------------------------------------------------------
+    def run(self) -> None:
+        """Drain every scheduled event (event-driven; no tick polling).
+
+        If the heap empties while the batch queue is non-empty, one final
+        mapping event runs; should it make no progress the remaining tasks
+        can never execute (virtual time only advances through events), so
+        they are dropped and ``deadlock_breaks`` records the anomaly.
+        """
+        while True:
+            if not self._events:
+                if not self.batch:
+                    break
+                held = len(self.batch)
+                self._mapping_event()
+                if self._events:
+                    continue
+                if self.batch and len(self.batch) >= held:
+                    self._deadlock_drain()
+                if not self._events:
+                    break
+                continue
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.now = max(self.now, t)
+            if kind == "arrive":
+                # coalesce simultaneous arrivals: the whole burst is admitted
+                # (and can merge pairwise) before the mapping event fires
+                items = [payload]
+                while (self._events and self._events[0][0] == t
+                       and self._events[0][2] == "arrive"):
+                    items.append(heapq.heappop(self._events)[3])
+                for item in items:
+                    task = self.sub.ingest(item, self.now)
+                    if task is not None:
+                        self.submit(task)
+                self._mapping_event()
+            elif kind == "finish":
+                mid, epoch = payload
+                m = self._machine(mid)
+                if m is None or epoch != self._epoch.get(mid):
+                    continue  # stale event (task evicted / machine retired)
+                self._handle_finish(m)
+                self._mapping_event()
+            elif kind == "warm":
+                m = self._machine(payload)
+                if m is not None and m.running is not None \
+                        and m.running.is_placeholder:
+                    m.running = None
+                self._mapping_event()
+            else:  # wake
+                self._mapping_event()
+
+    # -- admission control (Sections 4.1-4.4) ---------------------------------
+    def submit(self, task: Task) -> Task | None:
+        """Admission for one task: similarity lookup, merge appropriateness,
+        position finding, hash-table maintenance.  Returns the compound task
+        when the arrival merged, else None (task joined the batch queue)."""
+        self._arrival_index[task.tid] = self._n_arrivals
+        self._n_arrivals += 1
+        if task.queue_rank is None:
+            task.queue_rank = task.arrival
+        if self.cfg.merging == "none":
+            self.batch.append(task)
+            self._log("admit", self._index(task))
+            return None
+
+        hit = self.detector.find(task)
+        merged = None
+        level = None
+        if hit is not None:
+            level, existing = hit
+            viable = (existing.status == "queued"
+                      and existing.merged_into is None
+                      and len(existing.all_requests()) < self.cfg.merge_degree_cap
+                      and self.sub.merge_viable(existing))
+            if viable:
+                decision = self.gate.evaluate(
+                    existing, task, level, self.batch, self.sub.machines,
+                    lambda t, m: self.sub.oracle.mean_std(t, m), self.now)
+                if decision.do_merge:
+                    merged = merge_tasks(existing, task, level)
+                    self.sub.on_merge(existing, task, level)
+                    self.stats["merges"] += 1
+                    self._log("merge", self._index(task),
+                              self._index(existing), level.label,
+                              decision.position)
+                    if decision.position is not None:
+                        self._apply_position(existing, decision.position)
+                else:
+                    self.stats["merge_rejected"] += 1
+                    self._log("merge_rejected", self._index(task),
+                              self._index(existing), level.label)
+        self.detector.on_arrival(task, hit[1] if hit else None, merged, level)
+        if merged is None:
+            self.batch.append(task)
+            self._log("admit", self._index(task))
+        return merged
+
+    def _apply_position(self, merged: Task, pos: int) -> None:
+        """Re-rank the compound task so FCFS dispatch honours the found
+        position among the remaining batch-queue tasks (Section 4.4.5)."""
+        rest = sorted((t for t in self.batch if t.tid != merged.tid),
+                      key=lambda t: t.queue_rank)
+        if not rest:
+            return
+        if pos <= 0:
+            merged.queue_rank = rest[0].queue_rank - 1.0
+        elif pos >= len(rest):
+            merged.queue_rank = rest[-1].queue_rank + 1.0
+        else:
+            merged.queue_rank = 0.5 * (rest[pos - 1].queue_rank +
+                                       rest[pos].queue_rank)
+
+    # -- mapping event (Fig. 5.2 / Fig. 5.5) ----------------------------------
+    def _mapping_event(self) -> None:
+        self.sub.before_mapping(self.now)
+        # the overhead clock covers *scheduling* only: elasticity above and
+        # machine starts below run substrate code (compiles, model steps)
+        t0 = time.perf_counter()
+        machines = self.sub.machines
+        self.stats["mapping_events"] += 1
+        if self.cfg.hard_deadlines:
+            self._purge_infeasible()
+        if self.pruner is not None:
+            # pruner dropping pass over machine queues (Fig. 5.5)
+            dropped = self.pruner.drop_pass(machines, self.now,
+                                            self._misses_since_event)
+            self._misses_since_event = 0
+            for t in dropped:
+                self._evict_if_running(t, machines)
+                self._drop(t)
+        else:
+            self._misses_since_event = 0
+
+        if self.batch and any(m.free_slots > 0 for m in machines):
+            ctx = MappingContext(oracle=self.sub.oracle, now=self.now,
+                                 pruner=self.pruner)
+            if (self.pruner is not None
+                    and self.heuristic.name not in ("PAM", "PAMF")):
+                # Eq. 5.10 estimator runs every mapping event regardless of
+                # the plugged-in heuristic (Fig. 5.5)
+                self.pruner.refresh_defer_threshold(
+                    self.batch, machines, ctx.chance, self.now)
+            before_defer = self.pruner.stats["deferred"] if self.pruner else 0
+            mapped = self.heuristic.map_batch(self.batch, machines, ctx)
+            if self.pruner is not None:
+                self.stats["deferred"] += \
+                    self.pruner.stats["deferred"] - before_defer
+            mapped_ids = {t.tid for t, _ in mapped}
+            if mapped_ids:
+                self.batch = [t for t in self.batch if t.tid not in mapped_ids]
+                for t, m in mapped:
+                    t.status = "mapped"
+                    self.detector.on_departure(t)
+                    self._log("map", self._index(t), machines.index(m))
+        self.stats["mapping_wall_s"] += time.perf_counter() - t0
+        # start idle machines (execution time is the substrate's, not ours)
+        for m in machines:
+            if m.running is None and m.queue:
+                self._start_next(m)
+        if self.after_mapping is not None:
+            self.after_mapping(self)
+
+    def _purge_infeasible(self) -> None:
+        live, dead = [], []
+        for t in self.batch:
+            (dead if t.effective_deadline <= self.now else live).append(t)
+        for t in dead:
+            self.detector.on_departure(t)
+            self._drop(t)
+        self.batch = live
+
+    def _evict_if_running(self, task: Task, machines: list[Machine]) -> None:
+        """EVICT-mode drops can name an executing task: free its machine and
+        invalidate the in-flight finish event via the epoch counter."""
+        for m in machines:
+            if m.running is task:
+                m.running = None
+                m.run_end = m.busy_until = self.now
+                self._epoch[m.mid] = self._epoch.get(m.mid, 0) + 1
+
+    def _drop(self, task: Task) -> None:
+        task.status = "dropped"
+        n = len(task.all_requests())
+        self.sub.on_drop(task, self.now)
+        self._misses_since_event += n
+        self.stats["dropped_requests"] += n
+        self._log("drop", self._index(task))
+
+    def _deadlock_drain(self) -> None:
+        """No future events and an unmappable batch: nothing can ever make
+        progress again (see ``run``).  Drop the stragglers — silently
+        stranding them would corrupt QoS accounting — and record it."""
+        self.stats["deadlock_breaks"] += 1
+        for t in list(self.batch):
+            self.detector.on_departure(t)
+            self._drop(t)
+        self.batch = []
+
+    # -- machine execution ----------------------------------------------------
+    def _start_next(self, m: Machine) -> None:
+        if m.running is not None or m.busy_until > self.now:
+            return
+        while m.queue:
+            task = m.queue.pop(0)
+            if self.cfg.hard_deadlines and task.effective_deadline <= self.now:
+                self._drop(task)
+                continue
+            dur = self.sub.begin_execution(task, m, self.now)
+            task.status = "running"
+            m.running = task
+            m.run_end = m.busy_until = self.now + dur
+            self._epoch[m.mid] = self._epoch.get(m.mid, 0) + 1
+            self._push(m.run_end, "finish", (m.mid, self._epoch[m.mid]))
+            self._log("start", self._index(task),
+                      self.sub.machines.index(m), round(self.now, 6))
+            return
+
+    def _handle_finish(self, m: Machine) -> None:
+        task = m.running
+        m.running = None
+        if task is None:
+            return
+        missed = self.sub.finish_execution(task, m, self.now)
+        self._misses_since_event += missed
+        self.stats["last_completion"] = max(self.stats["last_completion"],
+                                            self.now)
+        self._log("finish", self._index(task), round(self.now, 6), missed)
+        self._start_next(m)

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .tasks import Machine, Task
+from .tasks import Machine
 
 __all__ = ["oversubscription_level", "adaptive_alpha", "DropToggle"]
 

@@ -23,7 +23,7 @@ Fig. 5.8 - success probability without materializing the convolution).
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

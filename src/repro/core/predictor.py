@@ -50,7 +50,6 @@ class RegressionTree:
         n = len(y)
         best = (0.0, None, None)
         y_sum, y_sq = y.sum(), (y * y).sum()
-        parent_sse = y_sq - y_sum * y_sum / n
         for f in range(X.shape[1]):
             order = np.argsort(X[:, f], kind="stable")
             xs, ys = X[order, f], y[order]

@@ -21,11 +21,11 @@ TPU-batched equivalent lives in ``repro.kernels.pmf_conv``.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from .oversubscription import DropToggle
 from .pmf import PMF, DropMode, chance_of_success, convolve_pct
-from .tasks import Machine, PETMatrix, Task
+from .tasks import Machine, Task
 
 __all__ = ["PruningConfig", "Pruner", "FairnessModule"]
 
@@ -228,6 +228,24 @@ class Pruner:
         return dropped
 
     # -------------------------------------------------------------- deferring
+    def refresh_defer_threshold(self, batch: list[Task],
+                                machines: list[Machine], chance_fn,
+                                now: float) -> None:
+        """Deferring Threshold Estimator pass (Eq. 5.10) for heuristics that
+        do not refresh it themselves (PAM/PAMF fold the update into their
+        phase-1 chance matrix; every other heuristic gets it from the
+        control plane on each mapping event, per Fig. 5.5).
+
+        ``chance_fn(task, machine) -> float`` supplies success chances.
+        """
+        if not self.cfg.dynamic_defer:
+            return
+        free = [m for m in machines if m.free_slots > 0]
+        if not free:
+            return
+        best = {t.tid: max(chance_fn(t, m) for m in free) for t in batch}
+        self.update_defer_threshold(batch, machines, best, now)
+
     def instantaneous_robustness(self, machines: list[Machine], now: float) -> float:
         """psi - mean success chance over everything queued (Eq. 5.9)."""
         probs = []

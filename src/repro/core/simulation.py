@@ -1,31 +1,26 @@
 """Discrete-event simulator for the Chapter 4/5/6 experiments.
 
-The simulator is the *resource allocation system* of Figs. 4.2/5.2/5.5: an
-admission-control front gate (similarity detection + merge appropriateness),
-a batch queue, a pluggable mapping heuristic, an optional pruning mechanism,
-and a pool of (possibly heterogeneous) machines.
-
-It drives the same ``core`` components that the real SMSE serving engine
-(``repro.serving``) uses against live JAX executables — the simulator swaps
-the executable for an execution-time oracle so thousand-task experiments run
-in milliseconds.
+The simulator is the *analytical substrate* of the unified scheduling
+control plane (``core.controlplane``): admission control, the batch queue,
+mapping heuristics and the pruning mechanism all live in ``ControlPlane`` —
+shared verbatim with the live SMSE serving engine — while this module
+supplies the substrate side: an execution-time oracle instead of compiled
+executables, payload-free prefix-cache accounting, and per-request QoS
+bookkeeping.  Thousand-task experiments run in milliseconds, and every
+scheduling decision is bit-identical to what the engine would take on the
+same trace and oracle (asserted in tests/test_controlplane.py).
 """
 
 from __future__ import annotations
 
-import heapq
-import itertools
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from .appropriateness import PositionFinder, VirtualQueueEvaluator
-from .heuristics import MappingContext, make_heuristic
-from .merging import MergeLevel, SimilarityDetector, merge_tasks
+from .controlplane import ControlConfig, ControlPlane, Substrate
 from .merge_model import VideoExecModel, VideoMeta
-from .oversubscription import adaptive_alpha, oversubscription_level
 from .pmf import PMF
-from .pruning import Pruner, PruningConfig
+from .pruning import PruningConfig
 from .tasks import Machine, PETMatrix, Task
 
 __all__ = ["SimConfig", "SimStats", "Simulator", "PETOracle", "VideoOracle"]
@@ -118,6 +113,17 @@ class SimConfig:
     seed: int = 0
     alpha: float = 2.0                  # base worst-case coefficient (Eq. 4.1)
     merge_degree_cap: int = 5           # §3.2.2: little gain beyond 5
+    # TASK-level result cache (the engine's "stream cachine", analytically):
+    # an identical request arriving after a completion is served at zero
+    # cost.  Off by default — Ch. 4/5 experiments predate it.
+    result_cache: bool = False
+    # elasticity hooks (the engine's queue-length hysteresis, analytically):
+    # up to ``elastic_pool`` clones of machines[0] are added while the batch
+    # queue exceeds ``scale_up_queue`` and retired when it falls below
+    # ``scale_down_queue``.  0 disables.
+    elastic_pool: int = 0
+    scale_up_queue: int = 12
+    scale_down_queue: int = 2
     # analytical paged-KV prefix cache (DESIGN.md §2.4): tasks carrying
     # ``tokens`` reuse the cached prefix and pay only the suffix's share of
     # the prefill.  0 blocks = disabled.  The *same* admission/eviction
@@ -126,6 +132,13 @@ class SimConfig:
     prefix_cache_blocks: int = 0
     kv_block_size: int = 16
     prefill_fraction: float = 0.6       # share of exec time that is prefill
+
+    def control(self) -> ControlConfig:
+        return ControlConfig(
+            heuristic=self.heuristic, merging=self.merging,
+            position_finder=self.position_finder, pruning=self.pruning,
+            hard_deadlines=self.hard_deadlines, alpha=self.alpha,
+            merge_degree_cap=self.merge_degree_cap)
 
 
 @dataclass
@@ -141,6 +154,11 @@ class SimStats:
     cost: float = 0.0
     energy: float = 0.0
     mapping_events: int = 0
+    mapping_wall_s: float = 0.0
+    deadlock_breaks: int = 0
+    result_cache_hits: int = 0
+    scale_ups: int = 0
+    scale_downs: int = 0
     per_type: dict = field(default_factory=dict)
     per_user_missrate: dict = field(default_factory=dict)
     deferred: int = 0
@@ -176,28 +194,22 @@ class SimStats:
 
 
 # ---------------------------------------------------------------------------
-# Simulator
+# Simulator — the oracle-backed substrate
 # ---------------------------------------------------------------------------
 
-class Simulator:
+class Simulator(Substrate):
     def __init__(self, tasks: list[Task], machines: list[Machine], oracle,
                  cfg: SimConfig | None = None):
         self.cfg = cfg or SimConfig()
         self.tasks = sorted(tasks, key=lambda t: t.arrival)
         self.machines = machines
         self.oracle = oracle
-        self.heuristic = make_heuristic(self.cfg.heuristic)
-        self.pruner = (Pruner(oracle, self.cfg.pruning)
-                       if self.cfg.pruning is not None else None)
-        self.detector = SimilarityDetector()
-        self.batch: list[Task] = []
         self.stats = SimStats()
-        self.now = 0.0
-        self._misses_since_event = 0
+        self.cp = ControlPlane(self, self.cfg.control())
         self._rng = np.random.default_rng(self.cfg.seed)
-        self._seq = itertools.count()
-        self._events: list = []
-        self._machine_epoch = {m.mid: 0 for m in machines}
+        self._result_cache: set = set()
+        self._base_pool = len(machines)
+        self._extra_mid = max((m.mid for m in machines), default=-1)
         self.kvcache = None
         if self.cfg.prefix_cache_blocks > 0:
             # lazy import: core stays importable without the serving package
@@ -205,183 +217,114 @@ class Simulator:
             self.kvcache = PrefixKVCache(self.cfg.prefix_cache_blocks,
                                          self.cfg.kv_block_size,
                                          clock_fn=lambda: self.now)
-            self.detector.prefix_index = self.kvcache.index
+            self.cp.detector.prefix_index = self.kvcache.index
 
-    # -- event plumbing -------------------------------------------------------
-    def _push(self, t: float, kind: str, payload) -> None:
-        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+    # -- delegation (public surface kept from the pre-control-plane API) -----
+    @property
+    def now(self) -> float:
+        return self.cp.now
+
+    @property
+    def batch(self) -> list[Task]:
+        return self.cp.batch
+
+    @property
+    def detector(self):
+        return self.cp.detector
+
+    @property
+    def pruner(self):
+        return self.cp.pruner
+
+    @property
+    def heuristic(self):
+        return self.cp.heuristic
 
     def run(self) -> SimStats:
         for task in self.tasks:
-            self._push(task.arrival, "arrive", task)
-        last_completion = 0.0
-        while self._events:
-            t, _, kind, payload = heapq.heappop(self._events)
-            self.now = max(self.now, t)
-            if kind == "arrive":
-                self._handle_arrival(payload)
-                self._mapping_event()
-            elif kind == "finish":
-                mid, epoch = payload
-                if epoch != self._machine_epoch[mid]:
-                    continue  # stale event (task was evicted)
-                last_completion = max(last_completion,
-                                      self._handle_finish(self.machines[mid]))
-                self._mapping_event()
-        self.stats.makespan = last_completion
-        return self.stats
+            self.cp.schedule_arrival(task.arrival, task)
+        self.cp.run()
+        c = self.cp.stats
+        s = self.stats
+        s.makespan = c["last_completion"]
+        s.merges = c["merges"]
+        s.merge_rejected = c["merge_rejected"]
+        s.mapping_events = c["mapping_events"]
+        s.mapping_wall_s = c["mapping_wall_s"]
+        s.deferred = c["deferred"]
+        s.deadlock_breaks = c["deadlock_breaks"]
+        return s
 
-    # -- admission control (Section 4.1/4.4) -----------------------------------
-    def _handle_arrival(self, task: Task) -> None:
+    # -- Substrate: admission -------------------------------------------------
+    def ingest(self, task: Task, now: float) -> Task | None:
         self.stats.n_requests += 1
-        task.queue_rank = task.arrival
-        if self.cfg.merging == "none":
-            self.batch.append(task)
+        if self.cfg.result_cache and task.key_task_level() in self._result_cache:
+            task.status = "done"
+            task.completion = now
+            self.stats.result_cache_hits += 1
+            on_time = now <= task.deadline
+            self.stats.on_time += 1 if on_time else 0
+            self.stats.missed += 0 if on_time else 1
+            self._note_outcome(task, on_time)
+            return None
+        return task
+
+    # -- Substrate: elasticity ------------------------------------------------
+    def before_mapping(self, now: float) -> None:
+        if self.cfg.elastic_pool <= 0:
             return
+        qlen = len(self.cp.batch)
+        if (qlen >= self.cfg.scale_up_queue
+                and len(self.machines) < self._base_pool + self.cfg.elastic_pool):
+            proto = self.machines[0]
+            self._extra_mid += 1
+            self.machines.append(Machine(
+                mid=self._extra_mid, mtype=proto.mtype, speed=proto.speed,
+                queue_size=proto.queue_size, cost_rate=proto.cost_rate,
+                power=proto.power))
+            self.stats.scale_ups += 1
+        elif (qlen <= self.cfg.scale_down_queue
+              and len(self.machines) > self._base_pool):
+            for i in range(len(self.machines) - 1, self._base_pool - 1, -1):
+                m = self.machines[i]
+                if m.running is None and not m.queue and m.busy_until <= now:
+                    self.machines.pop(i)
+                    self.stats.scale_downs += 1
+                    break
 
-        hit = self.detector.find(task)
-        merged = None
-        level = None
-        self._pending_position = None
-        if hit is not None:
-            level, existing = hit
-            viable = (existing.status == "queued"
-                      and existing.merged_into is None
-                      and len(existing.all_requests()) < self.cfg.merge_degree_cap)
-            if viable and self._merge_appropriate(existing, task, level):
-                merged = merge_tasks(existing, task, level)
-                self.stats.merges += 1
-                if self._pending_position is not None:
-                    self._apply_position(existing, self._pending_position)
-            elif viable:
-                self.stats.merge_rejected += 1
-        self.detector.on_arrival(task, hit[1] if hit else None, merged, level)
-        if merged is None:
-            self.batch.append(task)
+    # -- Substrate: execution -------------------------------------------------
+    def begin_execution(self, task: Task, m: Machine, now: float) -> float:
+        dur = self.oracle.sample(task, m)
+        dur = self._apply_prefix_reuse(task, dur)
+        self.stats.busy_time += dur
+        self.stats.cost += dur * m.cost_rate
+        self.stats.energy += dur * m.power
+        return dur
 
-    def _apply_position(self, merged: Task, pos: int) -> None:
-        """Re-rank the merged task so FCFS dispatch honours the found
-        position among the remaining batch-queue tasks."""
-        rest = sorted((t for t in self.batch if t.tid != merged.tid),
-                      key=lambda t: t.queue_rank)
-        if not rest:
-            return
-        if pos <= 0:
-            merged.queue_rank = rest[0].queue_rank - 1.0
-        elif pos >= len(rest):
-            merged.queue_rank = rest[-1].queue_rank + 1.0
-        else:
-            merged.queue_rank = 0.5 * (rest[pos - 1].queue_rank +
-                                       rest[pos].queue_rank)
+    def finish_execution(self, task: Task, m: Machine, now: float) -> int:
+        self._finish_prefix_reuse(task)
+        missed = 0
+        for r in task.all_requests():
+            r.status = "done"
+            r.completion = now
+            on_time = now <= r.deadline
+            if on_time:
+                self.stats.on_time += 1
+                if self.pruner:
+                    self.pruner.fairness.note_served(r.ttype)
+            else:
+                self.stats.missed += 1
+                missed += 1
+            self._note_outcome(r, on_time)
+            if self.cfg.result_cache:
+                self._result_cache.add(r.key_task_level())
+        return missed
 
-    def _merge_appropriate(self, existing: Task, task: Task,
-                           level: MergeLevel) -> bool:
-        policy = self.cfg.merging
-        if level is MergeLevel.TASK:
-            return True          # identical request: free reuse, no side effect
-        if policy == "aggressive":
-            # aggressive merging ignores appropriateness (§4.6.1); the
-            # position finder is still consulted to *place* the compound task
-            if self.cfg.position_finder:
-                ev = VirtualQueueEvaluator(
-                    self.machines, lambda t, m: self.oracle.mean_std(t, m),
-                    now=self.now, alpha=self.cfg.alpha)
-                pf = PositionFinder(ev)
-                rest = sorted((t for t in self.batch if t.tid != existing.tid),
-                              key=lambda t: t.queue_rank)
-                cand_task = _shallow_merged_view(existing, task)
-                base = ev.count_misses(self.batch + [task])
-                pos = (pf.linear(rest, cand_task, base)
-                       if self.cfg.position_finder == "linear"
-                       else pf.logarithmic(rest, cand_task, base))
-                self._pending_position = pos   # may be None: keep position
-            return True
-        alpha = self.cfg.alpha
-        if policy == "adaptive":
-            osl = oversubscription_level(
-                self.machines, lambda t, m: self.oracle.mean_std(t, m), self.now)
-            alpha = adaptive_alpha(osl)
-        ev = VirtualQueueEvaluator(
-            self.machines, lambda t, m: self.oracle.mean_std(t, m),
-            now=self.now, alpha=alpha)
-        queue_wo = self.batch + [task]
-        base = ev.count_misses(queue_wo)
-        # candidate merged queue: existing augmented in place
-        cand_task = _shallow_merged_view(existing, task)
-        cand_queue = [cand_task if t.tid == existing.tid else t for t in self.batch]
-        if self.cfg.position_finder and any(t.tid == existing.tid
-                                            for t in self.batch):
-            pf = PositionFinder(ev)
-            rest = sorted((t for t in self.batch if t.tid != existing.tid),
-                          key=lambda t: t.queue_rank)
-            pos = (pf.linear(rest, cand_task, base)
-                   if self.cfg.position_finder == "linear"
-                   else pf.logarithmic(rest, cand_task, base))
-            if pos is None:
-                return False
-            self._pending_position = pos
-            return True
-        merged_misses = ev.count_misses(cand_queue)
-        return merged_misses <= base
-
-    # -- mapping event (Fig. 5.2) ----------------------------------------------
-    def _mapping_event(self) -> None:
-        self.stats.mapping_events += 1
-        if self.cfg.hard_deadlines:
-            self._purge_infeasible()
-        # pruner dropping pass on machine queues (Fig. 5.5)
-        if self.pruner is not None:
-            dropped = self.pruner.drop_pass(self.machines, self.now,
-                                            self._misses_since_event)
-            self._misses_since_event = 0
-            for t in dropped:
-                self._account_drop(t)
-        else:
-            self._misses_since_event = 0
-
-        if self.batch and any(m.free_slots > 0 for m in self.machines):
-            ctx = MappingContext(oracle=self.oracle, now=self.now,
-                                 pruner=self.pruner)
-            if (self.pruner is not None and self.pruner.cfg.dynamic_defer
-                    and self.heuristic.name not in ("PAM", "PAMF")):
-                # Deferring Threshold Estimator (Eq. 5.10) runs every mapping
-                # event regardless of the plugged-in heuristic (Fig. 5.5)
-                free = [m for m in self.machines if m.free_slots > 0]
-                if free:
-                    best = {t.tid: max(ctx.chance(t, m) for m in free)
-                            for t in self.batch}
-                    self.pruner.update_defer_threshold(
-                        self.batch, self.machines, best, self.now)
-            before_defer = self.pruner.stats["deferred"] if self.pruner else 0
-            mapped = self.heuristic.map_batch(self.batch, self.machines, ctx)
-            if self.pruner:
-                self.stats.deferred += self.pruner.stats["deferred"] - before_defer
-            mapped_ids = {t.tid for t, _ in mapped}
-            if mapped_ids:
-                self.batch = [t for t in self.batch if t.tid not in mapped_ids]
-                for t, _m in mapped:
-                    t.status = "mapped"
-                    self.detector.on_departure(t)
-        # start idle machines
-        for m in self.machines:
-            if m.running is None and m.queue:
-                self._start_next(m)
-
-    def _purge_infeasible(self) -> None:
-        live, dead = [], []
-        for t in self.batch:
-            (dead if t.effective_deadline <= self.now else live).append(t)
-        for t in dead:
-            self._account_drop(t)
-            self.detector.on_departure(t)
-        self.batch = live
-
-    def _account_drop(self, task: Task) -> None:
+    def on_drop(self, task: Task, now: float) -> None:
         for r in task.all_requests():
             r.status = "dropped"
             self.stats.dropped += 1
             self._note_outcome(r, on_time=False)
-        self._misses_since_event += len(task.all_requests())
 
     def _note_outcome(self, req: Task, on_time: bool) -> None:
         tt = self.stats.per_type.setdefault(req.ttype, [0, 0])
@@ -390,25 +333,6 @@ class Simulator:
         u[1] += 1
         if not on_time:
             u[0] += 1
-
-    # -- machine execution ------------------------------------------------------
-    def _start_next(self, m: Machine) -> None:
-        while m.queue:
-            task = m.queue.pop(0)
-            if self.cfg.hard_deadlines and task.effective_deadline <= self.now:
-                self._account_drop(task)
-                continue
-            dur = self.oracle.sample(task, m)
-            dur = self._apply_prefix_reuse(task, dur)
-            task.status = "running"
-            m.running = task
-            m.run_end = self.now + dur
-            self._machine_epoch[m.mid] += 1
-            self._push(m.run_end, "finish", (m.mid, self._machine_epoch[m.mid]))
-            self.stats.busy_time += dur
-            self.stats.cost += dur * m.cost_rate
-            self.stats.energy += dur * m.power
-            return
 
     # -- analytical paged-KV prefix reuse (DESIGN.md §2.4) ---------------------
     def _apply_prefix_reuse(self, task: Task, dur: float) -> float:
@@ -438,33 +362,3 @@ class Simulator:
         if hit:
             self.kvcache.release(hit)
         self.stats.prefix_evictions = self.kvcache.stats["evictions"]
-
-    def _handle_finish(self, m: Machine) -> float:
-        task = m.running
-        m.running = None
-        if task is not None:
-            self._finish_prefix_reuse(task)
-        if task is not None:
-            for r in task.all_requests():
-                r.status = "done"
-                r.completion = self.now
-                on_time = self.now <= r.deadline
-                if on_time:
-                    self.stats.on_time += 1
-                    if self.pruner:
-                        self.pruner.fairness.note_served(r.ttype)
-                else:
-                    self.stats.missed += 1
-                    self._misses_since_event += 1
-                self._note_outcome(r, on_time)
-        self._start_next(m)
-        return self.now
-
-
-def _shallow_merged_view(existing: Task, arriving: Task) -> Task:
-    """A copy of ``existing`` with ``arriving`` merged in, for what-if
-    evaluation without mutating live state."""
-    import copy
-    view = copy.copy(existing)
-    view.children = list(existing.children) + [arriving]
-    return view

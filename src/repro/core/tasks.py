@@ -59,6 +59,21 @@ class Task:
     def is_merged(self) -> bool:
         return bool(self.children)
 
+    # -- control-plane placeholders ------------------------------------------
+    WARMUP_OP = "__warmup__"
+
+    @classmethod
+    def warmup_placeholder(cls, now: float) -> "Task":
+        """A pseudo-task occupying a machine that is cold-starting: the
+        virtual-queue/PCT estimators see the machine as busy until the
+        warm-up completes, without any request-level accounting."""
+        return cls(ttype="warmup", data_id="_", op=cls.WARMUP_OP,
+                   arrival=now, deadline=float("inf"), status="running")
+
+    @property
+    def is_placeholder(self) -> bool:
+        return self.op == self.WARMUP_OP
+
     def all_requests(self) -> list["Task"]:
         """The compound task plus every merged-in request (flattened)."""
         out = [self]

@@ -17,7 +17,6 @@ from dataclasses import dataclass
 import numpy as np
 
 from .merge_model import CODEC_PARAMS, VIC_OPS, VideoExecModel, VideoMeta
-from .pmf import PMF
 from .tasks import Machine, PETMatrix, Task
 
 

@@ -10,7 +10,6 @@ import time          # noqa: E402
 import traceback     # noqa: E402
 
 import jax           # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from ..configs.base import SHAPES, shape_applicable  # noqa: E402
 from ..configs.registry import ARCHS, get_arch, get_shape  # noqa: E402
@@ -18,7 +17,7 @@ from ..models import transformer as T  # noqa: E402
 from ..optim.optimizers import OptConfig, opt_init, opt_update  # noqa: E402
 from ..parallel import ctx as pctx  # noqa: E402
 from ..parallel import roofline as RL  # noqa: E402
-from ..parallel.sharding import (batch_specs, cache_specs, dp_axes,  # noqa: E402
+from ..parallel.sharding import (batch_specs, cache_specs,  # noqa: E402
                                  opt_state_specs, param_specs, to_named)
 from .mesh import make_production_mesh  # noqa: E402
 from .specs import (active_params, count_params, decode_input_specs,  # noqa: E402

@@ -24,7 +24,6 @@ from ..parallel import ctx as pctx
 def mamba2_init(key, d_model: int, ssm_cfg, dtype=jnp.bfloat16):
     d_inner = ssm_cfg.expand * d_model
     n_heads = ssm_cfg.n_ssm_heads or max(1, d_inner // 64)
-    head_d = d_inner // n_heads
     n = ssm_cfg.state_dim
     ks = jax.random.split(key, 6)
     zxbcdt = d_inner * 2 + 2 * n * n_heads + n_heads

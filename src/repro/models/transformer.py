@@ -13,7 +13,6 @@ projection + cross-entropy run in sequence chunks (vocabularies here reach
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -22,9 +21,9 @@ from jax import lax
 from ..configs.base import ModelConfig
 from ..parallel import ctx as pctx
 from . import xlstm as xl
-from .layers import (attention_apply, attention_init, cross_entropy_loss,
-                     dense, dense_init, embed, embed_init, mlp_apply,
-                     mlp_init, rmsnorm, rmsnorm_init)
+from .layers import (attention_apply, attention_init, dense, embed,
+                     embed_init, mlp_apply, mlp_init, rmsnorm,
+                     rmsnorm_init)
 from .moe import moe_apply, moe_init
 from .ssm import mamba2_apply, mamba2_init
 
@@ -401,7 +400,6 @@ def decode_fn(cfg: ModelConfig):
     hd = cfg.resolved_head_dim
 
     def f(params, cache, tokens):
-        b = tokens.shape[0]
         x = embed(params["embed"], tokens[:, None]) \
             if ("embed" in params) else None
         length = cache["len"]
@@ -542,8 +540,6 @@ def prefill_fn(cfg: ModelConfig, with_cache: bool = True):
     KV tensors for attention families, SSM/conv (and shared-attn KV) states
     for hybrid, recurrent states for xLSTM, self+cross KV for enc-dec.
     """
-    hd = cfg.resolved_head_dim
-
     def pad_kv(kv, max_len):
         # (L, B, S, Hkv, hd) -> (L, B, max_len, Hkv, hd)
         pad = max_len - kv.shape[2]

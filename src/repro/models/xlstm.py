@@ -26,7 +26,6 @@ from jax import lax
 def mlstm_init(key, d_model: int, n_heads: int, proj_factor: float = 2.0,
                dtype=jnp.bfloat16):
     d_inner = int(proj_factor * d_model)
-    hd = d_inner // n_heads
     ks = jax.random.split(key, 8)
     sc = 1.0 / math.sqrt(d_model)
     sci = 1.0 / math.sqrt(d_inner)

@@ -10,7 +10,6 @@ the 400B-class config where full Adam states cannot fit the pod.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,17 +1,24 @@
 """SMSE — Serverless Model Serving Engine (dissertation Ch. 6, adapted).
 
 The media-processing engine's architecture mapped onto LM inference
-(DESIGN.md §2): request ingestion, admission control (hash-based similarity
-+ merge appropriateness), a batch queue, a pluggable scheduler with the
-probabilistic pruning mechanism, processing units executing *real* compiled
-JAX model steps, a roofline-calibrated time estimator, an elasticity
-manager, and a result cache (the paper's "stream cachine").
+(DESIGN.md §2): request ingestion, a result cache (the paper's "stream
+cachine"), real compiled JAX model steps on processing units, a
+roofline-calibrated time estimator, and an elasticity manager.  Everything
+*scheduling* — admission control (similarity detection + merge
+appropriateness + position finding), the batch queue, the pluggable mapping
+heuristic, probabilistic pruning, and the event-driven clock — lives in the
+unified control plane (``core.controlplane``) shared verbatim with the
+discrete-event simulator; the engine is the control plane's live-execution
+substrate.
 
 Execution model: processing units are logical workers with independent
 timelines (the thesis's *emulation mode*): model steps run for real and are
 timed; unit clocks advance by the measured durations, so an 8-unit engine
 behaves like 8 parallel units even on one CPU.  Cold-starting a unit costs
 the measured executable-compile time — the serverless cold-start analogue.
+The engine clock is event-driven: it jumps from arrival to completion to
+warm-up boundary with no fixed-tick polling, so sparse/bursty traces cost
+O(events), not O(idle ticks).
 
 Request ops:
   * ``generate``: prefill + n new tokens (greedy/temperature per request)
@@ -33,15 +40,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.appropriateness import VirtualQueueEvaluator
-from ..core.merging import MergeLevel, SimilarityDetector, merge_tasks
-from .kvcache import PrefixKVCache
-from ..core.oversubscription import adaptive_alpha, oversubscription_level
+from ..core.controlplane import ControlConfig, ControlPlane, Substrate
 from ..core.pmf import PMF
-from ..core.pruning import Pruner, PruningConfig
-from ..core.heuristics import MappingContext, make_heuristic
+from ..core.pruning import PruningConfig
 from ..core.tasks import Machine, Task
 from ..models import transformer as T
+from .kvcache import PrefixKVCache
 
 
 # ---------------------------------------------------------------------------
@@ -65,7 +69,11 @@ class Request:
 
     @property
     def params_sig(self) -> tuple:
-        return (self.n_new, round(self.temperature, 4), self.seed)
+        # greedy decoding ignores the sampling seed: normalize it out so
+        # identical greedy requests hit the result cache and TASK-level
+        # merging instead of being split by an irrelevant parameter
+        seed = self.seed if self.temperature > 0.0 else 0
+        return (self.n_new, round(self.temperature, 4), seed)
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +225,23 @@ class ProcessingUnit:
         return time.perf_counter() - t0, cache
 
 
+class _StubUnit:
+    """Oracle-timed stand-in for ``ProcessingUnit`` (no JAX): used when the
+    engine runs in stub-execution mode for control-plane equivalence tests
+    and scheduler benchmarks."""
+
+    fns = ("stub",)   # non-None sentinel: clones count as warm starts
+
+    def __init__(self, uid: int, speed: float = 1.0):
+        self.uid = uid
+        self.machine = Machine(mid=uid, mtype="m0", speed=speed,
+                               queue_size=4)
+        self.warm = True
+
+    def warmup(self, prompt_len: int = 16, buckets=(1,)) -> float:
+        return 0.0
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -231,7 +256,9 @@ class EngineConfig:
     min_units: int = 1
     heuristic: str = "EDF"
     merging: str = "adaptive"          # none|conservative|aggressive|adaptive
+    position_finder: str | None = None  # None|"linear"|"log" (Section 4.4.5)
     pruning: PruningConfig | None = None
+    alpha: float = 2.0                 # base worst-case coefficient (Eq. 4.1)
     result_cache: bool = True
     elastic: bool = True
     scale_up_queue: int = 12           # batch-queue length to add a unit
@@ -258,50 +285,95 @@ class EngineConfig:
     # take the cold tiled-flash path instead
     prefix_max_prompt: int = 1024
 
+    def control(self) -> ControlConfig:
+        # the hard-deadline regime rides with pruning: infeasible tasks are
+        # culled (the viewer already received the low-quality fallback — §5
+        # intro); without a pruner late tasks still run (Ch. 4 regime)
+        return ControlConfig(
+            heuristic=self.heuristic, merging=self.merging,
+            position_finder=self.position_finder, pruning=self.pruning,
+            hard_deadlines=self.pruning is not None, alpha=self.alpha,
+            merge_degree_cap=self.merge_degree_cap)
 
-class ServingEngine:
-    """Single-process SMSE with virtual unit timelines."""
 
-    def __init__(self, model_cfg, params, cfg: EngineConfig):
+class ServingEngine(Substrate):
+    """Single-process SMSE: the control plane's live-execution substrate.
+
+    ``stub_oracle`` switches the engine to *stub-execution mode*: no JAX,
+    no processing-unit compilation — execution durations are sampled from
+    the given oracle (which also drives the admission/pruning math), so the
+    full engine code path can be replayed against the simulator's analytical
+    model for decision-sequence equivalence."""
+
+    def __init__(self, model_cfg, params, cfg: EngineConfig,
+                 stub_oracle=None):
         self.cfg = cfg
         self.model_cfg = model_cfg
         self.params = params
         self.estimator = TimeEstimator()
-        self.detector = SimilarityDetector()
-        self.heuristic = make_heuristic(cfg.heuristic)
-        self.oracle = _EngineOracle(self.estimator)
-        self.pruner = Pruner(self.oracle, cfg.pruning) if cfg.pruning else None
-        self.units: list[ProcessingUnit] = []
-        self.clock = 0.0
-        self.batch: list[Task] = []
+        self._stub = stub_oracle is not None
+        self.oracle = (stub_oracle if self._stub
+                       else _EngineOracle(self.estimator))
+        self.units: list = []
         self.requests: dict[int, list[Request]] = {}   # task id -> requests
+        self._inflight: dict[int, list[Request]] = {}  # executing task -> reqs
         self.cache: dict[tuple, list] = {}
         self.stats = {"completed": 0, "on_time": 0, "missed": 0, "merges": 0,
-                      "cache_hits": 0, "dropped": 0, "cold_starts": 0,
-                      "warm_starts": 0, "scale_ups": 0, "scale_downs": 0,
-                      "executions": 0, "prefix_hits": 0,
+                      "merge_rejected": 0, "cache_hits": 0, "dropped": 0,
+                      "cold_starts": 0, "warm_starts": 0, "scale_ups": 0,
+                      "scale_downs": 0, "executions": 0, "mapping_events": 0,
+                      "deferred": 0, "deadlock_breaks": 0,
+                      "mapping_wall_s": 0.0, "prefix_hits": 0,
                       "prefix_candidates": 0, "prefix_tokens_reused": 0,
                       "prefill_tokens": 0}  # prefix_* mirrored from kvcache
+        self.cp = ControlPlane(self, cfg.control())
         self.kvcache = None
-        if cfg.prefix_cache and model_cfg.family in ("dense", "vlm"):
+        if (cfg.prefix_cache and not self._stub
+                and model_cfg.family in ("dense", "vlm")):
             self.kvcache = PrefixKVCache(
                 cfg.kv_cache_blocks, cfg.kv_block_size,
                 value_fn=self._block_value, clock_fn=lambda: self.clock)
             # PREFIX-level similarity scoring rides the same trie
-            self.detector.prefix_index = self.kvcache.index
+            self.cp.detector.prefix_index = self.kvcache.index
         self._rng = np.random.default_rng(0)
         self._rid = 0
-        self._misses_since_event = 0
         for _ in range(cfg.n_units):
             self._add_unit()
+
+    # -- control-plane delegation --------------------------------------------
+    @property
+    def clock(self) -> float:
+        return self.cp.now
+
+    @property
+    def machines(self) -> list[Machine]:
+        return [u.machine for u in self.units]
+
+    @property
+    def detector(self):
+        return self.cp.detector
+
+    @property
+    def pruner(self):
+        return self.cp.pruner
+
+    @property
+    def batch(self) -> list[Task]:
+        return self.cp.batch
+
+    def _unit(self, mid: int):
+        return next(u for u in self.units if u.machine.mid == mid)
 
     # -- elasticity -----------------------------------------------------------
     def _add_unit(self):
         uid = self._next_uid = getattr(self, "_next_uid", 0) + 1
         shared = self.units[0].fns if self.units else \
             (self._warm_fns if getattr(self, "_warm_fns", None) else None)
-        unit = ProcessingUnit(uid, self.model_cfg, self.params,
-                              self.cfg.max_len, shared_fns=shared)
+        if self._stub:
+            unit = _StubUnit(uid)
+        else:
+            unit = ProcessingUnit(uid, self.model_cfg, self.params,
+                                  self.cfg.max_len, shared_fns=shared)
         cold = unit.warmup(buckets=self.cfg.batch_buckets)
         self._warm_fns = unit.fns
         if shared is None:
@@ -311,99 +383,76 @@ class ServingEngine:
         # initial units are pre-warmed before traffic opens (the thesis's
         # SMSE starts its processing units ahead of the stream); cold/warm
         # start-up charges virtual time only for mid-run elastic scale-ups
-        if self.clock > 0:
-            unit.machine.busy_until = self.clock + cold * self.cfg.time_scale
+        if self.clock > 0 and cold > 0:
+            self.cp.note_warmup(unit.machine,
+                                self.clock + cold * self.cfg.time_scale)
         self.units.append(unit)
 
-    def _elasticity(self):
+    def before_mapping(self, now: float) -> None:
         if not self.cfg.elastic:
             return
-        if self.clock < getattr(self, "_scale_cooldown", 0.0):
+        if now < getattr(self, "_scale_cooldown", 0.0):
             return
         qlen = len(self.batch)
         if qlen >= self.cfg.scale_up_queue and \
                 len(self.units) < self.cfg.max_units:
             self._add_unit()
             self.stats["scale_ups"] += 1
-            self._scale_cooldown = self.clock + 100.0
+            self._scale_cooldown = now + 100.0
         elif qlen <= self.cfg.scale_down_queue and \
                 len(self.units) > max(self.cfg.min_units, self.cfg.n_units):
             # retire only an idle, empty unit (never lose queued work)
             for i in range(len(self.units) - 1, -1, -1):
                 m = self.units[i].machine
-                if not m.queue and m.busy_until <= self.clock:
+                if not m.queue and m.running is None and m.busy_until <= now:
                     self.units.pop(i)
                     self.stats["scale_downs"] += 1
-                    self._scale_cooldown = self.clock + 100.0
+                    self._scale_cooldown = now + 100.0
                     break
 
-    # -- ingestion + admission (Ch. 4) ---------------------------------------
-    def submit(self, req: Request) -> int:
+    # -- ingestion (Ch. 4 front door) ----------------------------------------
+    def ingest(self, req: Request, now: float) -> Task | None:
         req.rid = self._rid
         self._rid += 1
         sig = (req.prompt, req.op, req.params_sig)
         if self.cfg.result_cache and req.op == "generate" and sig in self.cache:
             req.tokens = list(self.cache[sig])
             req.status = "done"
-            req.completed_at = self.clock
+            req.completed_at = now
             self.stats["cache_hits"] += 1
             self.stats["completed"] += 1
-            self.stats["on_time"] += 1 if self.clock <= req.deadline else 0
-            return req.rid
+            self.stats["on_time"] += 1 if now <= req.deadline else 0
+            return None
 
         task = Task(ttype=req.op, data_id=str(hash(req.prompt)), op=req.op,
-                    params=req.params_sig, arrival=self.clock,
+                    params=req.params_sig, arrival=now,
                     deadline=req.deadline, user=f"u{req.rid % 8}",
                     tokens=req.prompt)
-        task.queue_rank = self.clock
         # PREFIX-level admission scoring: partial overlap with cached KV is
         # reuse the hash-identity levels below cannot see
         if self.kvcache is not None and \
                 self.detector.find_prefix_overlap(req.prompt) > 0:
             self.stats["prefix_candidates"] += 1
         self.requests[task.tid] = [req]
-        self.oracle.note_task(task.tid, len(req.prompt), req.n_new)
+        self._oracle_note(task.tid, len(req.prompt), req.n_new)
+        return task
 
-        merged = None
-        level = None
-        hit = self.detector.find(task) if self.cfg.merging != "none" else None
-        if hit is not None:
-            level, existing = hit
-            viable = (existing.status == "queued"
-                      and existing.merged_into is None
-                      and len(existing.all_requests()) < self.cfg.merge_degree_cap
-                      and existing.tid in self.requests)
-            if viable and self._merge_ok(existing, task, level):
-                merged = merge_tasks(existing, task, level)
-                self.requests[existing.tid] += self.requests.pop(task.tid)
-                self.stats["merges"] += 1
-        if self.cfg.merging != "none":
-            self.detector.on_arrival(task, hit[1] if hit else None, merged,
-                                     level)
-        if merged is None:
-            self.batch.append(task)
-        return req.rid
+    def _oracle_note(self, tid: int, plen: int, n_new: int) -> None:
+        note = getattr(self.oracle, "note_task", None)
+        if note is not None:
+            note(tid, plen, n_new)
 
-    def _merge_ok(self, existing: Task, task: Task, level) -> bool:
-        if level is MergeLevel.TASK:
-            return True
-        if self.cfg.merging == "aggressive":
-            return True
-        machines = [u.machine for u in self.units]
-        alpha = 2.0
-        if self.cfg.merging == "adaptive":
-            osl = oversubscription_level(
-                machines, lambda t, m: self.oracle.mean_std(t, m), self.clock)
-            alpha = adaptive_alpha(osl)
-        ev = VirtualQueueEvaluator(machines,
-                                   lambda t, m: self.oracle.mean_std(t, m),
-                                   now=self.clock, alpha=alpha)
-        base = ev.count_misses(self.batch + [task])
-        import copy
-        view = copy.copy(existing)
-        view.children = list(existing.children) + [task]
-        cand = [view if t.tid == existing.tid else t for t in self.batch]
-        return ev.count_misses(cand) <= base
+    def _oracle_forget(self, tid: int) -> None:
+        forget = getattr(self.oracle, "forget", None)
+        if forget is not None:
+            forget(tid)
+
+    # -- merge bookkeeping ----------------------------------------------------
+    def merge_viable(self, existing: Task) -> bool:
+        return existing.tid in self.requests
+
+    def on_merge(self, existing: Task, arriving: Task, level) -> None:
+        self.requests[existing.tid] += self.requests.pop(arriving.tid)
 
     # -- paged KV prefix cache (DESIGN.md §2.4) --------------------------------
     def _block_value(self, blk, now: float) -> float:
@@ -424,149 +473,104 @@ class ServingEngine:
         vs = [b.payload[1] for b in hit.blocks]
         return np.concatenate(ks, axis=1), np.concatenate(vs, axis=1)
 
-    # -- scheduling + execution ------------------------------------------------
-    def _sync_machines(self):
-        """Expose unit timelines to the scheduling core: a unit busy past
-        `clock` looks like a machine with a running task ending then."""
-        for u in self.units:
-            m = u.machine
-            if m.busy_until > self.clock:
-                m.run_end = m.busy_until
-                if m.running is None:
-                    m.running = Task(ttype="busy", data_id="_",
-                                     op="busy", arrival=self.clock,
-                                     deadline=float("inf"))
-            else:
-                m.running = None
-
-    def _mapping_event(self):
-        self._sync_machines()
-        machines = [u.machine for u in self.units]
-        if self.pruner is not None:
-            # hard-deadline regime: infeasible batch tasks are pruned (the
-            # viewer already received the low-quality fallback — §5 intro)
-            live, dead = [], []
-            for t in self.batch:
-                (dead if t.effective_deadline <= self.clock else live).append(t)
-            for t in dead:
-                self.detector.on_departure(t)
-                self._complete_dropped(t)
-            self.batch = live
-            dropped = self.pruner.drop_pass(machines, self.clock,
-                                            self._misses_since_event)
-            self._misses_since_event = 0
-            for t in dropped:
-                self._complete_dropped(t)
-        if self.batch and any(m.free_slots > 0 for m in machines):
-            ctx = MappingContext(oracle=self.oracle, now=self.clock,
-                                 pruner=self.pruner)
-            mapped = self.heuristic.map_batch(self.batch, machines, ctx)
-            ids = {t.tid for t, _ in mapped}
-            if ids:
-                self.batch = [t for t in self.batch if t.tid not in ids]
-                for t, _ in mapped:
-                    t.status = "mapped"
-                    self.detector.on_departure(t)
-
-    def _complete_dropped(self, task: Task):
+    # -- execution substrate ---------------------------------------------------
+    def begin_execution(self, task: Task, m: Machine, now: float) -> float:
+        """Run the (possibly merged) task for real; return its duration in
+        virtual ticks.  The control plane owns the completion event."""
+        reqs = []
         for t in task.all_requests():
-            for r in self.requests.pop(t.tid, []):
-                r.status = "dropped"
-                self.stats["dropped"] += 1
-                self.stats["missed"] += 1
-            self.oracle.forget(t.tid)
-        self._misses_since_event += len(task.all_requests())
-
-    def _run_units(self):
-        """Execute one queued task on the most-backlogged idle unit."""
-        progressed = False
-        for unit in sorted(self.units, key=lambda u: u.machine.busy_until):
-            m = unit.machine
-            if m.busy_until > self.clock or not m.queue:
-                continue
-            task = m.queue.pop(0)
-            reqs = []
-            for t in task.all_requests():
-                reqs += self.requests.pop(t.tid, [])
-                self.oracle.forget(t.tid)
-            if not reqs:
-                continue
-            prompt = reqs[0].prompt
-            prefix, hit = None, None
-            reusable = (self.kvcache is not None and len(prompt) > 1
-                        and len(prompt) <= self.cfg.prefix_max_prompt)
-            if reusable:
-                # pin the cached prefix for the whole execution: blocks can
-                # never be evicted out from under a running prefill
-                hit = self.kvcache.lookup(prompt, max_tokens=len(prompt) - 1)
-                if hit:
-                    prefix = self._gather_prefix(hit)
-            self.stats["prefill_tokens"] += \
-                len(prompt) - (hit.n_tokens if hit else 0)
-            wall, kv_out = unit.execute(task, reqs, self._rng,
-                                        buckets=self.cfg.batch_buckets,
-                                        prefix=prefix)
-            if reusable and kv_out is not None and "k" in kv_out:
-                kk, vv = kv_out["k"], kv_out["v"]
-                self.kvcache.insert(
-                    prompt,
-                    lambda s0, s1: (np.asarray(kk[:, 0, s0:s1]),
-                                    np.asarray(vv[:, 0, s0:s1])))
-            if hit is not None and hit:
-                self.kvcache.release(hit)
+            reqs += self.requests.pop(t.tid, [])
+            self._oracle_forget(t.tid)
+        self._inflight[task.tid] = reqs
+        if not reqs:
+            return 0.0
+        if self._stub:
             self.stats["executions"] += 1
-            dur = wall * self.cfg.time_scale / m.speed
-            # TPU batching economics: batch-k costs (1 + marginal*(k-1)),
-            # not k (decode is HBM-bound; see EngineConfig)
-            k = len(reqs)
-            if k > 1:
-                dur *= (1.0 + self.cfg.batch_marginal_cost * (k - 1)) / k
-            key = self.estimator.key(task.op, len(reqs[0].prompt),
-                                     max(r.n_new for r in reqs), len(reqs))
-            self.estimator.observe(key, dur)
-            end = max(self.clock, m.busy_until) + dur
-            m.busy_until = end
-            m.running = task
-            m.run_end = end
-            for r in reqs:
-                r.status = "done"
-                r.completed_at = end
-                self.stats["completed"] += 1
-                if end <= r.deadline:
-                    self.stats["on_time"] += 1
-                else:
-                    self.stats["missed"] += 1
-                    self._misses_since_event += 1
-                if self.cfg.result_cache and r.op == "generate":
-                    self.cache[(r.prompt, r.op, r.params_sig)] = list(r.tokens)
-            progressed = True
-        return progressed
+            return self.oracle.sample(task, m)
 
-    def run(self, requests: list[tuple[float, Request]],
-            tick: float = 0.05) -> dict:
-        """Drive the engine over a virtual-time request trace."""
-        pending = sorted(requests, key=lambda x: x[0])
-        i = 0
-        idle_rounds = 0
-        while i < len(pending) or self.batch or \
-                any(u.machine.queue or u.machine.busy_until > self.clock
-                    for u in self.units):
-            while i < len(pending) and pending[i][0] <= self.clock:
-                self.submit(pending[i][1])
-                i += 1
-            self._elasticity()
-            self._mapping_event()
-            if not self._run_units():
-                idle_rounds += 1
+        unit = self._unit(m.mid)
+        prompt = reqs[0].prompt
+        prefix, hit = None, None
+        reusable = (self.kvcache is not None and len(prompt) > 1
+                    and len(prompt) <= self.cfg.prefix_max_prompt)
+        if reusable:
+            # pin the cached prefix for the whole execution: blocks can
+            # never be evicted out from under a running prefill
+            hit = self.kvcache.lookup(prompt, max_tokens=len(prompt) - 1)
+            if hit:
+                prefix = self._gather_prefix(hit)
+        self.stats["prefill_tokens"] += \
+            len(prompt) - (hit.n_tokens if hit else 0)
+        wall, kv_out = unit.execute(task, reqs, self._rng,
+                                    buckets=self.cfg.batch_buckets,
+                                    prefix=prefix)
+        if reusable and kv_out is not None and "k" in kv_out:
+            kk, vv = kv_out["k"], kv_out["v"]
+            self.kvcache.insert(
+                prompt,
+                lambda s0, s1: (np.asarray(kk[:, 0, s0:s1]),
+                                np.asarray(vv[:, 0, s0:s1])))
+        if hit is not None and hit:
+            self.kvcache.release(hit)
+        self.stats["executions"] += 1
+        dur = wall * self.cfg.time_scale / m.speed
+        # TPU batching economics: batch-k costs (1 + marginal*(k-1)),
+        # not k (decode is HBM-bound; see EngineConfig)
+        k = len(reqs)
+        if k > 1:
+            dur *= (1.0 + self.cfg.batch_marginal_cost * (k - 1)) / k
+        key = self.estimator.key(task.op, len(reqs[0].prompt),
+                                 max(r.n_new for r in reqs), len(reqs))
+        self.estimator.observe(key, dur)
+        return dur
+
+    def finish_execution(self, task: Task, m: Machine, now: float) -> int:
+        reqs = self._inflight.pop(task.tid, [])
+        missed = 0
+        for r in reqs:
+            r.status = "done"
+            r.completed_at = now
+            self.stats["completed"] += 1
+            if now <= r.deadline:
+                self.stats["on_time"] += 1
+                if self.pruner is not None:
+                    self.pruner.fairness.note_served(task.ttype)
             else:
-                idle_rounds = 0
-            nexts = [u.machine.busy_until for u in self.units
-                     if u.machine.busy_until > self.clock]
-            if i < len(pending):
-                nexts.append(pending[i][0])
-            self.clock = min(nexts) if nexts else self.clock + tick
-            if idle_rounds > 10000:   # safety
-                break
+                self.stats["missed"] += 1
+                missed += 1
+            if self.cfg.result_cache and r.op == "generate":
+                self.cache[(r.prompt, r.op, r.params_sig)] = list(r.tokens)
+        return missed
+
+    def on_drop(self, task: Task, now: float) -> None:
+        # an EVICT-mode drop can name an *executing* task, whose requests
+        # already moved from ``requests`` to ``_inflight`` at dispatch
+        reqs = self._inflight.pop(task.tid, [])
+        for t in task.all_requests():
+            reqs += self.requests.pop(t.tid, [])
+            self._oracle_forget(t.tid)
+        # dropped is its own bucket (simulator semantics): "missed" counts
+        # only tasks that *ran* late, so miss-rate consumers combine
+        # missed + dropped — exactly like SimStats.miss_rate
+        for r in reqs:
+            r.status = "dropped"
+            r.completed_at = now
+            self.stats["dropped"] += 1
+
+    # -- driving ---------------------------------------------------------------
+    def run(self, requests: list[tuple[float, Request]]) -> dict:
+        """Drive the engine over a virtual-time request trace (event-driven:
+        wall cost scales with events, not with idle virtual time)."""
+        for t, req in requests:
+            self.cp.schedule_arrival(t, req)
+        self.cp.run()
+        c = self.cp.stats
+        self.stats["merges"] = c["merges"]
+        self.stats["merge_rejected"] = c["merge_rejected"]
+        self.stats["mapping_events"] = c["mapping_events"]
+        self.stats["deferred"] = c["deferred"]
+        self.stats["deadlock_breaks"] = c["deadlock_breaks"]
+        self.stats["mapping_wall_s"] = c["mapping_wall_s"]
         out = dict(self.stats)
         if self.kvcache is not None:
             # the cache's own counters are authoritative — the engine only

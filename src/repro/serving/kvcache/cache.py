@@ -23,7 +23,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from .pool import Block, BlockPool
-from .trie import PrefixIndex, TrieNode
+from .trie import PrefixIndex
 
 __all__ = ["CacheHit", "PrefixKVCache"]
 

@@ -17,11 +17,10 @@ from __future__ import annotations
 
 import signal
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..ckpt.checkpoint import CheckpointManager
 from ..data.pipeline import DataConfig, DataPipeline

@@ -7,11 +7,10 @@ import numpy as np
 import pytest
 
 from repro.core.heuristics import HEURISTICS, MappingContext, make_heuristic
-from repro.core.merge_model import VideoExecModel, VideoMeta
 from repro.core.merging import MergeLevel, SimilarityDetector, merge_tasks
 from repro.core.oversubscription import DropToggle, adaptive_alpha
 from repro.core.pruning import Pruner, PruningConfig
-from repro.core.simulation import (PETOracle, SimConfig, SimStats, Simulator,
+from repro.core.simulation import (PETOracle, SimConfig, Simulator,
                                    VideoOracle)
 from repro.core.tasks import Machine, PETMatrix, Task
 from repro.core.workload import spiky_hc_workload, video_streaming_workload

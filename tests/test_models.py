@@ -12,7 +12,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import SHAPES, shape_applicable
 from repro.configs.registry import ARCHS
 from repro.models import transformer as T
 from repro.models.layers import (decode_attention, flash_attention,

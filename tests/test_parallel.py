@@ -5,13 +5,11 @@ These need >1 device, so they re-exec themselves in a subprocess with
 --xla_force_host_platform_device_count (the main test process keeps 1
 device per the assignment's conftest rule)."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
 

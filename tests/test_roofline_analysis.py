@@ -4,7 +4,6 @@ and against hand counts on scan/remat/grad compositions."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax import lax
 
@@ -77,7 +76,6 @@ class TestFlopCounting:
 
 class TestCollectives:
     def test_sharded_matmul_allgather(self):
-        import os
         if jax.device_count() < 4:
             pytest.skip("needs >=4 devices (run under DRYRUN_DEVICES)")
         from jax.sharding import NamedSharding, PartitionSpec as P

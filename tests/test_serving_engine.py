@@ -52,6 +52,29 @@ class TestMergeLevels:
         assert len(reqs[0].tokens) == 3
         assert all(r.tokens == reqs[0].tokens for r in reqs)
 
+    def test_greedy_seed_normalized_into_task_level(self):
+        """temperature==0 decoding ignores the seed, so identical greedy
+        requests with different seeds must TASK-merge into one execution."""
+        eng = _engine(merging="aggressive")
+        p = (2, 7, 1, 8, 2, 8)
+        reqs = [Request(prompt=p, n_new=2, temperature=0.0, seed=s,
+                        deadline=1e9) for s in (0, 1, 2)]
+        stats = eng.run([(0.0, r) for r in reqs])
+        assert stats["executions"] == 1
+        assert stats["merges"] == 2
+        assert all(r.tokens == reqs[0].tokens for r in reqs)
+        assert stats["deadlock_breaks"] == 0
+
+    def test_sampled_seed_still_distinguishes(self):
+        """temperature>0 requests keep the seed in their signature (they
+        are DATA_OP, not TASK, so each gets its own sampled trajectory)."""
+        r1 = Request(prompt=(1, 2, 3), n_new=2, temperature=0.8, seed=0)
+        r2 = Request(prompt=(1, 2, 3), n_new=2, temperature=0.8, seed=1)
+        assert r1.params_sig != r2.params_sig
+        g1 = Request(prompt=(1, 2, 3), n_new=2, temperature=0.0, seed=0)
+        g2 = Request(prompt=(1, 2, 3), n_new=2, temperature=0.0, seed=1)
+        assert g1.params_sig == g2.params_sig
+
     def test_data_op_respects_per_request_n_new(self):
         """Same prompt + op, different params: shared prefill, each request
         still gets exactly its own n_new tokens."""
@@ -83,6 +106,17 @@ class TestResultCache:
         assert eng.stats["executions"] == execs      # no new execution
         assert eng.stats["cache_hits"] == 1
         assert r2.status == "done" and r2.tokens == r1.tokens
+
+    def test_greedy_seed_normalized_hits(self):
+        """A different seed on a greedy request must not bust the cache."""
+        eng = _engine(result_cache=True)
+        p = (9, 8, 7, 6, 5)
+        r1 = Request(prompt=p, n_new=2, temperature=0.0, seed=3, deadline=1e9)
+        eng.run([(0.0, r1)])
+        r2 = Request(prompt=p, n_new=2, temperature=0.0, seed=9, deadline=1e9)
+        eng.run([(eng.clock, r2)])
+        assert eng.stats["cache_hits"] == 1
+        assert r2.tokens == r1.tokens
 
     def test_param_mismatch_misses(self):
         eng = _engine(result_cache=True)
@@ -130,6 +164,8 @@ class TestPrefixCache:
         assert s_on["prefill_tokens"] < s_off["prefill_tokens"]
         assert s_on["prefix_tokens_reused"] > 0
         assert s_on["completed"] == s_off["completed"] == 64
+        # the event-driven loop must never hit the no-progress escape hatch
+        assert s_on["deadlock_breaks"] == 0 == s_off["deadlock_breaks"]
         toks_on = [r.tokens for _, r in tr_on]
         toks_off = [r.tokens for _, r in tr_off]
         assert toks_on == toks_off

@@ -2,8 +2,6 @@
 (atomic/async/elastic), data pipeline determinism, fault-tolerant trainer,
 and the SMSE serving engine."""
 
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -183,7 +181,6 @@ class TestTrainer:
         assert tr2.ckpt.latest_step() == 8
 
     def test_restart_matches_uninterrupted(self, tmp_path):
-        import shutil
         a_dir, b_dir = tmp_path / "a", tmp_path / "b"
         tra = _tiny_trainer(a_dir, steps=6)
         state_a = tra.run()
