@@ -1,5 +1,6 @@
 """Ch. 6 (Figs. 6.4-6.9) — the SMSE prototype on real model executions,
-plus the event-driven scheduler-overhead benchmark on a bursty trace.
+plus the event-driven scheduler-overhead benchmark on a bursty trace and
+the front-door router-scaling sweep.
 
 Validation targets:
   * warm-started units start much faster than cold (Fig 6.4's thread-vs-
@@ -7,8 +8,12 @@ Validation targets:
   * deadline-aware policies (EDF/MU) beat FCFS on miss rate (Fig 6.7);
   * merging+pruning cut executions (cost) while preserving QoS;
   * the control plane's event-driven loop costs O(events) on sparse bursty
-    traces (no idle-tick polling) with bounded per-mapping-event overhead —
-    emitted to ``BENCH_serving.json`` for results/render_experiments.py.
+    traces (no idle-tick polling) with bounded per-mapping-event overhead;
+  * the front door: a 1-plane Router matches the bare engine's QoS exactly,
+    and the shared cross-plane detector steers duplicate / prefix-
+    overlapping traffic to the plane holding the merge target or cached KV
+    (DESIGN.md §2.6) — all emitted to ``BENCH_serving.json`` for
+    results/render_experiments.py.
 """
 
 from __future__ import annotations
@@ -22,9 +27,10 @@ import numpy as np
 
 from repro.configs.registry import ARCHS
 from repro.core.pruning import PruningConfig
-from repro.core.simulation import PETOracle
-from repro.core.tasks import PETMatrix
+from repro.core.simulation import PETOracle, SimConfig, Simulator
+from repro.core.tasks import Machine, PETMatrix, Task
 from repro.models import transformer as T
+from repro.serving.cluster import Plane, Router, make_engine_planes
 from repro.serving.engine import (EngineConfig, ProcessingUnit, Request,
                                   ServingEngine)
 
@@ -130,6 +136,124 @@ def scheduler_overhead(n_requests: int, csv: Csv, checks: dict) -> list[dict]:
     return rows
 
 
+def _dup_heavy_trace(n: int, seed: int = 1, n_prompts: int = 4,
+                     deadline: float = 400.0, gap: float = 0.5):
+    """Arrivals dense enough that duplicates of a hot prompt are usually
+    still queued somewhere — the regime where routing on the shared
+    detector can co-locate them with their merge target."""
+    rng = np.random.default_rng(seed)
+    prompts = [tuple(rng.integers(1, 1000, size=8).tolist())
+               for _ in range(n_prompts)]
+    out, t = [], 0.0
+    for _ in range(n):
+        out.append((t, Request(
+            prompt=prompts[int(rng.integers(0, n_prompts))], op="generate",
+            n_new=int(rng.integers(1, 4)), seed=int(rng.integers(0, 2)),
+            deadline=t + deadline)))
+        t += float(rng.exponential(gap))
+    return out
+
+
+def _router_row(n_planes: int, detector: str, stats: dict,
+                wall: float) -> dict:
+    """One BENCH_serving.json router row (schema shared with
+    results/render_experiments.py::router_scaling_table)."""
+    routed = stats["router"]["routed"].values()
+    total = stats["n_requests"]
+    return {
+        "planes": n_planes,
+        "detector": detector,
+        "requests": total,
+        "on_time": stats["on_time"],
+        "miss_rate": 1.0 - stats["on_time"] / max(total, 1),
+        "merges": stats["merges"],
+        "affinity_routed": stats["router"]["affinity_hits"],
+        "prefix_routed": stats["router"]["prefix_affinity"],
+        "routed_spread": f"{min(routed)}-{max(routed)}",
+        "deadlock_breaks": stats["deadlock_breaks"],
+        "wall_s": wall,
+    }
+
+
+def router_scaling(n_requests: int, csv: Csv, checks: dict) -> list[dict]:
+    """Front-door scaling: 1/2/4 stub-engine planes under the affinity
+    policy, shared vs per-plane detector, plus a 2-plane simulator row
+    showing prefix-affinity routing against the paged KV cache."""
+    rng = np.random.default_rng(3)
+    pet = PETMatrix.generate(["generate"], ["m0"], rng, mean_range=(8, 16))
+    ekw = dict(n_units=1, max_units=1, elastic=False, result_cache=False,
+               prefix_cache=False, heuristic="EDF", merging="adaptive")
+
+    bare = ServingEngine(None, None, EngineConfig(**ekw),
+                         stub_oracle=PETOracle(pet, seed=11))
+    bare_stats = bare.run(_dup_heavy_trace(n_requests))
+
+    rows = []
+    for n_planes in (1, 2, 4):
+        for shared in (True, False):
+            planes = make_engine_planes(
+                None, None, EngineConfig(**ekw), n_planes,
+                stub_oracles=[PETOracle(pet, seed=11)
+                              for _ in range(n_planes)])
+            router = Router(planes, policy="affinity",
+                            shared_detector=shared)
+            t0 = time.perf_counter()
+            stats = router.run(_dup_heavy_trace(n_requests))
+            wall = time.perf_counter() - t0
+            total = stats["n_requests"]
+            row = _router_row(n_planes, "shared" if shared else "per-plane",
+                              stats, wall)
+            rows.append(row)
+            csv.add(f"router_{n_planes}p_{row['detector']}",
+                    merges=row["merges"],
+                    affinity_routed=row["affinity_routed"],
+                    miss_rate=round(row["miss_rate"], 3))
+            checks[f"router_accounted_{n_planes}p_{row['detector']}"] = \
+                total == n_requests
+            if n_planes == 1 and shared:
+                # 1-plane front door == bare engine (the oracle property the
+                # equivalence tests assert in full decision-trace detail)
+                checks["router_1p_matches_bare"] = (
+                    (stats["on_time"], stats["missed"], stats["dropped"],
+                     stats["merges"])
+                    == (bare_stats["on_time"], bare_stats["missed"],
+                        bare_stats["dropped"], bare_stats["merges"]))
+            if n_planes > 1 and shared:
+                checks[f"cross_plane_affinity_{n_planes}p"] = \
+                    row["affinity_routed"] > 0
+
+    # -- prefix-affinity row: simulator planes, payload-free KV cache -------
+    def sim_plane(pid: int) -> Plane:
+        sim = Simulator([], [Machine(mid=1, mtype="m0", queue_size=4)],
+                        PETOracle(pet, seed=5 + pid),
+                        SimConfig(heuristic="EDF", prefix_cache_blocks=64,
+                                  kv_block_size=16))
+        return Plane(sim, pid=pid)
+
+    router = Router([sim_plane(0), sim_plane(1)], policy="affinity")
+    srng = np.random.default_rng(7)
+    sys_prompts = [tuple(srng.integers(1, 1000, size=32).tolist())
+                   for _ in range(2)]
+    t, n_sim = 0.0, min(n_requests, 48)
+    t0 = time.perf_counter()
+    for i in range(n_sim):
+        toks = sys_prompts[i % 2] + \
+            tuple(srng.integers(1000, 2000, size=8).tolist())
+        router.submit(Task(ttype="generate", data_id=f"s{i}", op="generate",
+                           params=(), arrival=t, deadline=t + 500.0,
+                           tokens=toks), t)
+        t += 30.0
+    stats = router.drain()
+    wall = time.perf_counter() - t0
+    row = _router_row(2, "shared+prefix", stats, wall)
+    rows.append(row)
+    csv.add("router_2p_prefix_sim", prefix_routed=row["prefix_routed"],
+            prefix_hits=stats["prefix_hits"])
+    checks["prefix_affinity_routes"] = row["prefix_routed"] > 0
+    checks["prefix_affinity_hits"] = stats["prefix_hits"] > 0
+    return rows
+
+
 def run(csv: Csv, n_requests: int = 60) -> dict:
     checks = {}
     cfg, params = _model()
@@ -183,7 +307,9 @@ def run(csv: Csv, n_requests: int = 60) -> dict:
 
     # --- event-driven scheduler overhead on a bursty trace -----------------
     rows = scheduler_overhead(max(n_requests * 4, 160), csv, checks)
+    # --- front-door router scaling (1/2/4 planes, shared vs per-plane) -----
+    router_rows = router_scaling(max(n_requests, 40), csv, checks)
     with open(OUT_PATH, "w") as f:
-        json.dump({"bench": "serving_control_plane", "rows": rows}, f,
-                  indent=1)
+        json.dump({"bench": "serving_control_plane", "rows": rows,
+                   "router_rows": router_rows}, f, indent=1)
     return checks

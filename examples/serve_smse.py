@@ -1,61 +1,74 @@
-"""End-to-end serving driver: the SMSE engine serving a small model with
-batched requests — merging, pruning, elasticity and result caching live.
+"""End-to-end serving driver: the cluster front door over SMSE planes —
+streaming admission, cross-plane routing, merging, pruning, elasticity and
+both caches live.
 
-    PYTHONPATH=src python examples/serve_smse.py [--requests 80]
+    PYTHONPATH=src python examples/serve_smse.py [--requests 80] [--planes 2]
 
-Requests are real generations on a reduced smollm-family model; merged
-requests share one batched prefill+decode execution (one compound task per
-merge group, the paper's data-and-operation reuse).
+Requests are real generations on a reduced smollm-family model, streamed
+through ``Router.submit`` one arrival at a time (the serverless front
+door).  Shared-system-prompt traffic shows the two reuse tiers: the
+affinity policy routes prefix-overlapping requests to the plane whose
+paged KV cache already holds their blocks (cross-plane locality), and
+within a plane merged requests share one batched prefill+decode execution.
 """
 
 import argparse
 import sys
+from collections import Counter
 
 sys.path.insert(0, "src")
 
-import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs.registry import get_arch  # noqa: E402
 from repro.core.pruning import PruningConfig  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
-from repro.serving.engine import (EngineConfig, Request,  # noqa: E402
-                                  ServingEngine)
+from repro.serving.cluster import Router, make_engine_planes  # noqa: E402
+from repro.serving.engine import EngineConfig, Request  # noqa: E402
+
+import jax  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=80)
+    ap.add_argument("--planes", type=int, default=2)
+    ap.add_argument("--router", default="affinity")
     ap.add_argument("--merging", default="adaptive")
     ap.add_argument("--no-pruning", action="store_true")
     args = ap.parse_args()
 
     cfg = get_arch("smollm-360m").reduced().scaled(n_layers=2, remat=False)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, EngineConfig(
+    ecfg = EngineConfig(
         n_units=2, max_units=4, heuristic="EDF", merging=args.merging,
         pruning=None if args.no_pruning else PruningConfig(
             initial_defer_threshold=0.1, base_drop_threshold=0.05),
-        max_len=64, batch_buckets=(1, 2, 4, 8)))
+        max_len=64, batch_buckets=(1, 2, 4, 8))
+    router = Router(make_engine_planes(cfg, params, ecfg, args.planes),
+                    policy=args.router)
 
     rng = np.random.default_rng(0)
     # shared-system-prompt traffic: a few hot >=32-token system prompts with
     # distinct user suffixes — the paged KV prefix cache (DESIGN.md §2.4)
-    # prefills only the suffix after the first request per system prompt
+    # prefills only the suffix after the first request per system prompt,
+    # and the router keeps each system prompt's traffic on the plane that
+    # cached it (DESIGN.md §2.6)
     sys_prompts = [tuple(rng.integers(1, cfg.vocab, size=32).tolist())
                    for _ in range(4)]
-    trace, t = [], 0.0
+    t = 0.0
     for _ in range(args.requests):
         prompt = sys_prompts[int(rng.integers(0, len(sys_prompts)))] + \
             tuple(rng.integers(1, cfg.vocab, size=6).tolist())
-        trace.append((t, Request(
+        router.submit(Request(
             prompt=prompt,
             n_new=4, temperature=float(rng.choice([0.0, 0.0, 0.7])),
-            seed=int(rng.integers(0, 3)), deadline=t + 400)))
+            seed=int(rng.integers(0, 3)), deadline=t + 400), t)
         t += float(rng.exponential(5))
+    stats = router.drain()
 
-    stats = engine.run(trace)
     total = stats["completed"] + stats["dropped"]
+    print(f"planes             {args.planes} (policy {args.router})")
     print(f"requests           {total}")
     print(f"on-time            {stats['on_time']} "
           f"({100 * stats['on_time'] / total:.0f}%)")
@@ -71,6 +84,17 @@ def main():
     print(f"cold/warm starts   {stats['cold_starts']}/"
           f"{stats.get('warm_starts', 0)}")
     print(f"scale up/down      {stats['scale_ups']}/{stats['scale_downs']}")
+
+    print("\ncross-plane routing decisions")
+    reasons = Counter(d[2] for d in router.decisions)
+    for reason, n in reasons.most_common():
+        print(f"  {reason:<18} {n}")
+    print(f"  routed per plane   {stats['router']['routed']}")
+    for p in stats["planes"]:
+        print(f"  {p['name']}: prefix hits {p.get('prefix_hits', 0)}, "
+              f"merges {p.get('merges', 0)}, "
+              f"executions {p.get('executions', 0)}, "
+              f"dropped {p.get('dropped', 0)}")
 
 
 if __name__ == "__main__":

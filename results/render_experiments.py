@@ -114,6 +114,28 @@ def serving_control_plane_table(path="../BENCH_serving.json"):
     return "\n".join(out)
 
 
+def router_scaling_table(path="../BENCH_serving.json"):
+    """Front-door router scaling: planes x detector sharing (DESIGN.md
+    §2.6; benchmarks/serving.py::router_scaling)."""
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return "(run `python -m benchmarks.run --only serving` first)"
+    rows = json.load(open(p)).get("router_rows", [])
+    if not rows:
+        return "(re-run `python -m benchmarks.run --only serving`: " \
+               "no router_rows in BENCH_serving.json)"
+    out = ["| planes | detector | requests | on-time | miss rate | merges | "
+           "affinity-routed | prefix-routed | routed spread |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['planes']} | {r['detector']} | {r['requests']} "
+            f"| {r['on_time']} | {r['miss_rate']:.3f} | {r['merges']} "
+            f"| {r['affinity_routed']} | {r['prefix_routed']} "
+            f"| {r['routed_spread']} |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     cur = load("dryrun.jsonl")
     base = load("dryrun_baseline.jsonl")
@@ -131,3 +153,5 @@ if __name__ == "__main__":
     print(prefix_cache_table())
     print("\n## §Control plane — event-driven scheduler on a bursty trace\n")
     print(serving_control_plane_table())
+    print("\n## §Front door — router scaling (planes x detector sharing)\n")
+    print(router_scaling_table())

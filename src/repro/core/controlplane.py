@@ -134,6 +134,10 @@ class ControlPlane:
         self.trace: list | None = None
         #: optional callable(cp) invoked after every mapping event
         self.after_mapping = None
+        #: optional callable(task, machine) -> cached-prefix tokens, wired by
+        #: substrates that own a prefix KV cache; surfaces to heuristics as
+        #: ``MappingContext.prefix_overlap`` (prefix-cache-aware mapping)
+        self.prefix_fn = None
         self._events: list = []
         self._seq = itertools.count()
         self._epoch: dict[int, int] = {}
@@ -143,7 +147,13 @@ class ControlPlane:
 
     # -- event plumbing -------------------------------------------------------
     def _push(self, t: float, kind: str, payload=None) -> None:
-        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+        # arrivals outrank same-instant finish/warm/wake events.  In a
+        # closed-trace run this falls out of push order (every arrival is
+        # scheduled before the loop starts, so its seq is lower); encoding it
+        # in the key keeps the order identical under *streaming* admission,
+        # where arrivals are pushed mid-run with late sequence numbers.
+        prio = 0 if kind == "arrive" else 1
+        heapq.heappush(self._events, (t, prio, next(self._seq), kind, payload))
 
     def schedule_arrival(self, t: float, item) -> None:
         self._push(t, "arrive", item)
@@ -175,17 +185,25 @@ class ControlPlane:
         return self._arrival_index.get(task.tid, -1)
 
     # -- the event loop -------------------------------------------------------
-    def run(self) -> None:
-        """Drain every scheduled event (event-driven; no tick polling).
+    def run(self, until: float | None = None) -> None:
+        """Drain scheduled events (event-driven; no tick polling).
 
-        If the heap empties while the batch queue is non-empty, one final
-        mapping event runs; should it make no progress the remaining tasks
-        can never execute (virtual time only advances through events), so
-        they are dropped and ``deadlock_breaks`` records the anomaly.
+        With ``until=None`` the plane runs to quiescence: if the heap
+        empties while the batch queue is non-empty, one final mapping event
+        runs; should it make no progress the remaining tasks can never
+        execute (virtual time only advances through events), so they are
+        dropped and ``deadlock_breaks`` records the anomaly.
+
+        With a horizon, only events *strictly before* ``until`` are
+        processed and the batch queue is left waiting for future arrivals
+        (streaming mode: the front door advances planes to an admission
+        instant before routing).  Strict-ness matters: an arrival scheduled
+        *at* ``until`` right after the call is still admitted ahead of
+        same-instant completions, exactly as in a closed-trace run.
         """
         while True:
             if not self._events:
-                if not self.batch:
+                if until is not None or not self.batch:
                     break
                 held = len(self.batch)
                 self._mapping_event()
@@ -196,15 +214,17 @@ class ControlPlane:
                 if not self._events:
                     break
                 continue
-            t, _, kind, payload = heapq.heappop(self._events)
+            if until is not None and self._events[0][0] >= until:
+                break
+            t, _, _, kind, payload = heapq.heappop(self._events)
             self.now = max(self.now, t)
             if kind == "arrive":
                 # coalesce simultaneous arrivals: the whole burst is admitted
                 # (and can merge pairwise) before the mapping event fires
                 items = [payload]
                 while (self._events and self._events[0][0] == t
-                       and self._events[0][2] == "arrive"):
-                    items.append(heapq.heappop(self._events)[3])
+                       and self._events[0][3] == "arrive"):
+                    items.append(heapq.heappop(self._events)[4])
                 for item in items:
                     task = self.sub.ingest(item, self.now)
                     if task is not None:
@@ -310,7 +330,7 @@ class ControlPlane:
 
         if self.batch and any(m.free_slots > 0 for m in machines):
             ctx = MappingContext(oracle=self.sub.oracle, now=self.now,
-                                 pruner=self.pruner)
+                                 pruner=self.pruner, prefix_fn=self.prefix_fn)
             if (self.pruner is not None
                     and self.heuristic.name not in ("PAM", "PAMF")):
                 # Eq. 5.10 estimator runs every mapping event regardless of

@@ -43,8 +43,10 @@ class MappingContext:
     k_percent: float = 0.5          # KPB parameter
     moc_threshold: float = 0.3      # MOC robustness culling threshold
     alpha: float = 0.0              # worst-case coefficient (0 = mean estimate)
+    prefix_fn: object = None        # (task, machine) -> cached-prefix tokens
     _avail: dict = field(default_factory=dict)     # mid -> float
     _exec: dict = field(default_factory=dict)      # (tid, mid) -> float
+    _pfx: dict = field(default_factory=dict)       # (tid, mid) -> int
 
     # -- scalar time estimates ------------------------------------------------
     def exec_mean(self, task: Task, machine: Machine) -> float:
@@ -66,6 +68,20 @@ class MappingContext:
 
     def expected_completion(self, task: Task, machine: Machine) -> float:
         return self.avail(machine) + self.exec_mean(task, machine)
+
+    def prefix_overlap(self, task: Task, machine: Machine) -> int:
+        """KV-locality term: prompt tokens of ``task`` already held in a
+        prefix cache ``machine`` can attach to (0 without a cache).  The
+        same score the front-door router uses across planes, exposed here
+        so per-plane heuristics are prefix-cache-aware through one API."""
+        if self.prefix_fn is None:
+            return 0
+        key = (task.tid, machine.mid)
+        v = self._pfx.get(key)
+        if v is None:
+            v = self.prefix_fn(task, machine)
+            self._pfx[key] = v
+        return v
 
     # -- probabilistic estimates --------------------------------------------
     def chance(self, task: Task, machine: Machine) -> float:
@@ -285,8 +301,17 @@ class _SortedDispatch(Heuristic):
     def sort_key(self, task, machines, ctx):
         raise NotImplementedError
 
-    def pick_machine(self, free, ctx):
-        return min(free, key=ctx.avail)
+    def pick_machine(self, task, free, ctx):
+        # earliest-available unit wins; KV locality breaks exact ties, so a
+        # shared-prefix task lands on the unit already holding its blocks
+        # when the pool gives the scheduler a free choice (idle machines).
+        # The locality term is only evaluated among actual ties: a prefix
+        # lookup is a trie walk, not worth paying when avail discriminates.
+        best = min(ctx.avail(m) for m in free)
+        tied = [m for m in free if ctx.avail(m) == best]
+        if len(tied) == 1:
+            return tied[0]
+        return max(tied, key=lambda m: ctx.prefix_overlap(task, m))
 
     def map_batch(self, batch, machines, ctx):
         out = []
@@ -294,7 +319,7 @@ class _SortedDispatch(Heuristic):
             free = [m for m in machines if m.free_slots > 0]
             if not free:
                 break
-            m = self.pick_machine(free, ctx)
+            m = self.pick_machine(task, free, ctx)
             if ctx.pruner is not None and not ctx.defer_ok(
                     task, ctx.chance(task, m)):
                 continue

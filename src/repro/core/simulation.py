@@ -218,6 +218,8 @@ class Simulator(Substrate):
                                          self.cfg.kv_block_size,
                                          clock_fn=lambda: self.now)
             self.cp.detector.prefix_index = self.kvcache.index
+            # prefix-cache-aware mapping, same wiring as the live engine
+            self.cp.prefix_fn = self._prefix_locality
 
     # -- delegation (public surface kept from the pre-control-plane API) -----
     @property
@@ -240,10 +242,20 @@ class Simulator(Substrate):
     def heuristic(self):
         return self.cp.heuristic
 
+    def _prefix_locality(self, task: Task, machine: Machine) -> int:
+        return self.detector.find_prefix_overlap(task.tokens)
+
     def run(self) -> SimStats:
+        """Closed-trace convenience: schedule every constructor task, drain,
+        sync stats.  The cluster front door instead streams arrivals into
+        ``cp`` directly and reads ``collect_stats()``."""
         for task in self.tasks:
             self.cp.schedule_arrival(task.arrival, task)
         self.cp.run()
+        return self.collect_stats()
+
+    def collect_stats(self) -> SimStats:
+        """Sync control-plane counters into ``stats`` (idempotent)."""
         c = self.cp.stats
         s = self.stats
         s.makespan = c["last_completion"]

@@ -1,7 +1,13 @@
-"""Serving launcher: run the SMSE engine over a synthetic request trace.
+"""Serving launcher: the cluster front door over a synthetic request trace.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
-        --requests 100 --merging adaptive --pruning --heuristic EDF
+        --requests 100 --merging adaptive --pruning --heuristic EDF \
+        --planes 2 --router affinity
+
+``--planes N`` shards the engine into N planes behind a ``Router``
+(``--router`` picks the policy); the JSON summary carries the aggregate,
+per-plane stats (hits, merges, drops, deadlock_breaks) and the routing
+counters.  ``--planes 1`` reproduces the bare engine exactly.
 """
 
 from __future__ import annotations
@@ -15,7 +21,8 @@ import numpy as np
 from ..configs.registry import get_arch
 from ..core.pruning import PruningConfig
 from ..models import transformer as T
-from ..serving.engine import EngineConfig, Request, ServingEngine
+from ..serving.cluster import ROUTER_POLICIES, Router, make_engine_planes
+from ..serving.engine import EngineConfig, Request
 
 
 def synth_trace(n: int, vocab: int, n_prompts: int = 8, rate: float = 0.2,
@@ -44,6 +51,10 @@ def main():
     ap.add_argument("--pruning", action="store_true")
     ap.add_argument("--rate", type=float, default=0.2)
     ap.add_argument("--deadline", type=float, default=400.0)
+    ap.add_argument("--planes", type=int, default=1,
+                    help="scheduling planes behind the front-door router")
+    ap.add_argument("--router", default="least-loaded",
+                    choices=sorted(ROUTER_POLICIES))
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced().scaled(n_layers=2, remat=False)
@@ -54,10 +65,11 @@ def main():
                               base_drop_threshold=0.1)
         if args.pruning else None,
         max_len=64)
-    engine = ServingEngine(cfg, params, ecfg)
+    router = Router(make_engine_planes(cfg, params, ecfg, args.planes),
+                    policy=args.router)
     trace = synth_trace(args.requests, cfg.vocab, rate=args.rate,
                         deadline=args.deadline)
-    stats = engine.run(trace)
+    stats = router.run(trace)
     print(json.dumps(stats, indent=2))
 
 

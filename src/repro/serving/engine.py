@@ -75,6 +75,15 @@ class Request:
         seed = self.seed if self.temperature > 0.0 else 0
         return (self.n_new, round(self.temperature, 4), seed)
 
+    def to_task(self, arrival: float, ordinal: int) -> Task:
+        """The scheduling-core view of this request — the single source of
+        the similarity-key scheme, shared by engine admission, the front
+        door's routing probes, and simulator-plane adaptation."""
+        return Task(ttype=self.op, data_id=str(hash(self.prompt)),
+                    op=self.op, params=self.params_sig, arrival=arrival,
+                    deadline=self.deadline, user=f"u{ordinal % 8}",
+                    tokens=self.prompt)
+
 
 # ---------------------------------------------------------------------------
 # time estimator (roofline-calibrated, then EWMA-corrected)
@@ -306,10 +315,15 @@ class ServingEngine(Substrate):
     model for decision-sequence equivalence."""
 
     def __init__(self, model_cfg, params, cfg: EngineConfig,
-                 stub_oracle=None):
+                 stub_oracle=None, warm_fns=None):
         self.cfg = cfg
         self.model_cfg = model_cfg
         self.params = params
+        if warm_fns is not None:
+            # cross-engine warm start: another engine's compiled executables
+            # (the warm-container ladder extended across planes — the first
+            # unit here warm-starts instead of compiling)
+            self._warm_fns = warm_fns
         self.estimator = TimeEstimator()
         self._stub = stub_oracle is not None
         self.oracle = (stub_oracle if self._stub
@@ -335,6 +349,11 @@ class ServingEngine(Substrate):
                 value_fn=self._block_value, clock_fn=lambda: self.clock)
             # PREFIX-level similarity scoring rides the same trie
             self.cp.detector.prefix_index = self.kvcache.index
+            # prefix-cache-aware mapping: heuristics see per-machine KV
+            # locality through MappingContext.prefix_overlap (units share
+            # one engine-wide cache today, so the machine argument is the
+            # seam for per-unit caches, not yet a discriminator)
+            self.cp.prefix_fn = self._prefix_locality
         self._rng = np.random.default_rng(0)
         self._rid = 0
         for _ in range(cfg.n_units):
@@ -363,6 +382,14 @@ class ServingEngine(Substrate):
 
     def _unit(self, mid: int):
         return next(u for u in self.units if u.machine.mid == mid)
+
+    def _prefix_locality(self, task: Task, machine: Machine) -> int:
+        return self.detector.find_prefix_overlap(task.tokens)
+
+    @property
+    def warm_fns(self):
+        """Compiled executables for warm-starting sibling engines/planes."""
+        return getattr(self, "_warm_fns", None)
 
     # -- elasticity -----------------------------------------------------------
     def _add_unit(self):
@@ -424,10 +451,7 @@ class ServingEngine(Substrate):
             self.stats["on_time"] += 1 if now <= req.deadline else 0
             return None
 
-        task = Task(ttype=req.op, data_id=str(hash(req.prompt)), op=req.op,
-                    params=req.params_sig, arrival=now,
-                    deadline=req.deadline, user=f"u{req.rid % 8}",
-                    tokens=req.prompt)
+        task = req.to_task(now, req.rid)
         # PREFIX-level admission scoring: partial overlap with cached KV is
         # reuse the hash-identity levels below cannot see
         if self.kvcache is not None and \
@@ -560,10 +584,20 @@ class ServingEngine(Substrate):
     # -- driving ---------------------------------------------------------------
     def run(self, requests: list[tuple[float, Request]]) -> dict:
         """Drive the engine over a virtual-time request trace (event-driven:
-        wall cost scales with events, not with idle virtual time)."""
+        wall cost scales with events, not with idle virtual time).
+
+        Closed-trace convenience over the streaming control plane — the
+        cluster front door (``serving.cluster.Router``) drives the same
+        ``cp`` incrementally via ``schedule_arrival`` + ``cp.run(until)``
+        and reads ``collect_stats()`` directly."""
         for t, req in requests:
             self.cp.schedule_arrival(t, req)
         self.cp.run()
+        return self.collect_stats()
+
+    def collect_stats(self) -> dict:
+        """Sync control-plane and kv-cache counters into one stats dict
+        (idempotent; callable mid-stream between ``cp.run(until)`` steps)."""
         c = self.cp.stats
         self.stats["merges"] = c["merges"]
         self.stats["merge_rejected"] = c["merge_rejected"]

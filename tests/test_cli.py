@@ -33,6 +33,15 @@ def test_serve_cli(tmp_path):
     assert '"completed"' in out
 
 
+def test_serve_cli_multiplane():
+    out = _run(["repro.launch.serve", "--requests", "10", "--units", "1",
+                "--planes", "2", "--router", "affinity", "--rate", "0.5"])
+    assert '"completed"' in out
+    # per-plane stats + routing counters ride in the JSON summary
+    assert '"planes"' in out and '"router"' in out
+    assert '"deadlock_breaks"' in out
+
+
 def test_dryrun_cli_tiny_decode():
     env = dict(ENV, DRYRUN_DEVICES="8", DRYRUN_MESH="4,2")
     out = subprocess.run(

@@ -1,0 +1,350 @@
+"""Front-door Cluster/Router coverage (DESIGN.md §2.6): the single-plane
+oracle equivalence (a 1-plane Router must reproduce the bare engine's
+decision sequence and QoS exactly), streaming admission, cross-plane
+dedup/prefix-affinity routing, mixed-kind planes, the router-policy
+registry, and the config field-roundtrips.  Stub execution throughout —
+no JAX math in this file."""
+
+import numpy as np
+import pytest
+
+from repro.core.controlplane import ControlConfig
+from repro.core.heuristics import MappingContext
+from repro.core.pruning import PruningConfig
+from repro.core.simulation import PETOracle, SimConfig, Simulator
+from repro.core.tasks import Machine, PETMatrix, Task
+from repro.serving.cluster import (ROUTER_POLICIES, Plane, Router,
+                                   RouterPolicy, make_router_policy)
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+
+def _pet(seed=3, mean_range=(8, 16)):
+    rng = np.random.default_rng(seed)
+    return PETMatrix.generate(["generate"], ["m0"], rng,
+                              mean_range=mean_range)
+
+
+def _request_trace(n=40, seed=1, n_prompts=4, deadline=200.0, gap=1.0):
+    rng = np.random.default_rng(seed)
+    prompts = [tuple(rng.integers(1, 1000, size=8).tolist())
+               for _ in range(n_prompts)]
+    out, t = [], 0.0
+    for _ in range(n):
+        out.append((t, Request(
+            prompt=prompts[int(rng.integers(0, n_prompts))], op="generate",
+            n_new=int(rng.integers(1, 4)), seed=int(rng.integers(0, 2)),
+            deadline=t + deadline)))
+        t += float(rng.exponential(gap))
+    return out
+
+
+def _stub_engine(pet, n_units=2, **cfg_kw):
+    cfg_kw.setdefault("heuristic", "EDF")
+    cfg_kw.setdefault("merging", "adaptive")
+    return ServingEngine(None, None, EngineConfig(
+        n_units=n_units, max_units=n_units, elastic=False,
+        result_cache=False, prefix_cache=False, **cfg_kw),
+        stub_oracle=PETOracle(pet, seed=11))
+
+
+# ---------------------------------------------------------------------------
+# registries + config roundtrips (mirrors the heuristics-registry coverage)
+# ---------------------------------------------------------------------------
+
+class TestRegistries:
+    def test_router_policy_registry_names(self):
+        assert {"round-robin", "least-loaded", "affinity"} <= \
+            set(ROUTER_POLICIES)
+        for name in ROUTER_POLICIES:
+            pol = make_router_policy(name)
+            assert isinstance(pol, RouterPolicy) and pol.name == name
+
+    def test_router_policy_case_insensitive(self):
+        assert make_router_policy("AFFINITY").name == "affinity"
+
+    def test_unknown_router_policy_message(self):
+        with pytest.raises(KeyError, match=r"unknown router policy 'bogus'"):
+            make_router_policy("bogus")
+        # the error must name the valid options, like make_heuristic's
+        with pytest.raises(KeyError, match="affinity"):
+            make_router_policy("bogus")
+
+    def test_engine_config_control_roundtrip(self):
+        prune = PruningConfig(initial_defer_threshold=0.2,
+                              base_drop_threshold=0.07)
+        ecfg = EngineConfig(heuristic="MSD", merging="conservative",
+                            position_finder="log", pruning=prune,
+                            alpha=1.5, merge_degree_cap=7)
+        cc = ecfg.control()
+        assert isinstance(cc, ControlConfig)
+        assert (cc.heuristic, cc.merging, cc.position_finder) == \
+            ("MSD", "conservative", "log")
+        assert cc.pruning is prune
+        assert cc.alpha == 1.5 and cc.merge_degree_cap == 7
+        assert cc.hard_deadlines          # rides with pruning
+        assert not EngineConfig(pruning=None).control().hard_deadlines
+
+    def test_sim_config_control_roundtrip(self):
+        scfg = SimConfig(heuristic="MU", merging="aggressive",
+                         position_finder="linear", hard_deadlines=True,
+                         alpha=0.5, merge_degree_cap=3)
+        cc = scfg.control()
+        assert (cc.heuristic, cc.merging, cc.position_finder,
+                cc.hard_deadlines, cc.alpha, cc.merge_degree_cap) == \
+            ("MU", "aggressive", "linear", True, 0.5, 3)
+
+
+# ---------------------------------------------------------------------------
+# single-plane oracle equivalence
+# ---------------------------------------------------------------------------
+
+class TestSinglePlaneEquivalence:
+    @pytest.mark.parametrize("policy", sorted(ROUTER_POLICIES))
+    def test_router_reproduces_bare_engine(self, policy):
+        """The acceptance criterion: decision trace and QoS tuple of a
+        1-plane Router over the stub engine == the bare ServingEngine on
+        the same trace and oracle, for every registered policy."""
+        pet = _pet()
+        bare = _stub_engine(pet)
+        bare.cp.trace = []
+        s_bare = bare.run(_request_trace())
+
+        eng = _stub_engine(pet)
+        eng.cp.trace = []
+        router = Router([Plane(eng)], policy=policy)
+        s_r = router.run(_request_trace())
+
+        assert eng.cp.trace == bare.cp.trace
+        assert (s_r["on_time"], s_r["missed"], s_r["dropped"]) == \
+            (s_bare["on_time"], s_bare["missed"], s_bare["dropped"])
+        assert s_r["merges"] == s_bare["merges"] > 0
+        assert s_r["merge_rejected"] == s_bare["merge_rejected"]
+        assert s_r["executions"] == s_bare["executions"]
+        assert s_r["deadlock_breaks"] == 0
+
+    def test_streaming_matches_closed_trace_under_pruning(self):
+        """submit/step/drain (explicit stepping past completions) must take
+        the same decisions as the closed-trace wrapper, including on a
+        drop-heavy pruned configuration."""
+        kw = dict(heuristic="MSD", merging="conservative",
+                  pruning=PruningConfig(initial_defer_threshold=0.1,
+                                        base_drop_threshold=0.05,
+                                        dynamic_defer=True))
+        pet = _pet()
+        bare = _stub_engine(pet, n_units=1, **kw)
+        bare.cp.trace = []
+        s_bare = bare.run(_request_trace(deadline=20.0, gap=0.5))
+
+        eng = _stub_engine(pet, n_units=1, **kw)
+        eng.cp.trace = []
+        router = Router([Plane(eng)], policy="least-loaded")
+        for t, req in _request_trace(deadline=20.0, gap=0.5):
+            router.submit(req, t)
+            router.step(t)        # an extra, coarser step changes nothing
+        s_r = router.drain()
+
+        assert s_bare["dropped"] > 0          # the drop path really ran
+        assert eng.cp.trace == bare.cp.trace
+        assert (s_r["on_time"], s_r["missed"], s_r["dropped"]) == \
+            (s_bare["on_time"], s_bare["missed"], s_bare["dropped"])
+
+    def test_out_of_order_trace_matches_bare_engine(self):
+        """The bare engine's event heap reorders a non-monotonic trace;
+        the closed-trace wrapper must too (it sorts before streaming),
+        or a late-submitted early arrival is admitted at an already-
+        advanced plane clock and spuriously misses its deadline."""
+        def ooo_trace():
+            return [(100.0, Request(prompt=(1, 2, 3, 4), op="generate",
+                                    n_new=2, deadline=180.0)),
+                    (200.0, Request(prompt=(5, 6, 7, 8), op="generate",
+                                    n_new=2, deadline=280.0)),
+                    (50.0, Request(prompt=(9, 10, 11, 12), op="generate",
+                                   n_new=2, deadline=80.0))]
+
+        pet = _pet()
+        bare = _stub_engine(pet)
+        bare.cp.trace = []
+        s_bare = bare.run(ooo_trace())
+
+        eng = _stub_engine(pet)
+        eng.cp.trace = []
+        s_r = Router([Plane(eng)], policy="least-loaded").run(ooo_trace())
+        assert eng.cp.trace == bare.cp.trace
+        assert (s_r["on_time"], s_r["missed"], s_r["dropped"]) == \
+            (s_bare["on_time"], s_bare["missed"], s_bare["dropped"])
+        assert s_r["missed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# cross-plane routing
+# ---------------------------------------------------------------------------
+
+class TestCrossPlaneRouting:
+    def test_shared_detector_dedup_affinity(self):
+        """Duplicates of a hot prompt route to the plane holding the live
+        merge target and actually merge there."""
+        pet = _pet()
+        planes = [Plane(_stub_engine(pet, n_units=1), pid=i)
+                  for i in range(2)]
+        router = Router(planes, policy="affinity")
+        stats = router.run(_request_trace(gap=0.5))
+        assert stats["router"]["affinity_hits"] > 0
+        assert stats["merges"] > 0
+        assert any(r.startswith("affinity:") for _, _, r in router.decisions)
+        assert stats["completed"] + stats["dropped"] == 40
+        assert stats["deadlock_breaks"] == 0
+
+    def test_per_plane_detector_is_blind(self):
+        """shared_detector=False: the affinity policy sees no cross-plane
+        similarity and degrades to pure load balancing."""
+        pet = _pet()
+        planes = [Plane(_stub_engine(pet, n_units=1), pid=i)
+                  for i in range(2)]
+        router = Router(planes, policy="affinity", shared_detector=False)
+        stats = router.run(_request_trace(gap=0.5))
+        assert stats["router"]["affinity_hits"] == 0
+        assert {r for _, _, r in router.decisions} == {"load"}
+        assert stats["completed"] + stats["dropped"] == 40
+
+    def test_prefix_affinity_on_simulator_planes(self):
+        """Prefix-overlapping tasks route to the plane whose paged KV cache
+        holds their blocks (the cross-plane PREFIX level, payload-free)."""
+        pet = _pet()
+
+        def sim_plane(pid):
+            sim = Simulator([], [Machine(mid=1, mtype="m0", queue_size=4)],
+                            PETOracle(pet, seed=5 + pid),
+                            SimConfig(heuristic="EDF",
+                                      prefix_cache_blocks=64,
+                                      kv_block_size=16))
+            return Plane(sim, pid=pid)
+
+        router = Router([sim_plane(0), sim_plane(1)], policy="affinity")
+        sys_prompt = tuple(range(1, 33))
+        rng = np.random.default_rng(0)
+        t = 0.0
+        for i in range(10):
+            toks = sys_prompt + tuple(rng.integers(100, 200, size=8).tolist())
+            router.submit(Task(ttype="generate", data_id=f"d{i}",
+                               op="generate", params=(), arrival=t,
+                               deadline=t + 500.0, tokens=toks), t)
+            t += 40.0       # past each completion: the cache is warm
+        stats = router.drain()
+        assert stats["router"]["prefix_affinity"] > 0
+        assert stats["prefix_hits"] > 0
+        # every post-warmup arrival followed the cached prefix to one plane
+        routed = stats["router"]["routed"]
+        assert max(routed.values()) >= 9
+        assert stats["on_time"] == stats["n_requests"] == 10
+
+    def test_round_robin_spreads(self):
+        pet = _pet()
+        planes = [Plane(_stub_engine(pet, n_units=1), pid=i)
+                  for i in range(4)]
+        router = Router(planes, policy="round-robin")
+        stats = router.run(_request_trace(n=16))
+        assert set(stats["router"]["routed"].values()) == {4}
+
+    def test_mixed_kind_planes_one_front_door(self):
+        """An engine plane and a simulator plane behind one router: the
+        Request payload is adapted per plane kind and the two stat
+        vocabularies are bridged, so the established aggregate invariants
+        (completed + dropped == n_requests == n) hold for mixed clusters."""
+        pet = _pet()
+        sim = Simulator([], [Machine(mid=1, mtype="m0", queue_size=4)],
+                        PETOracle(pet, seed=9), SimConfig(heuristic="EDF"))
+        router = Router([Plane(_stub_engine(pet, n_units=1), pid=0),
+                         Plane(sim, pid=1)], policy="round-robin")
+        n = 12
+        stats = router.run(_request_trace(n=n))
+        assert stats["n_requests"] == n
+        assert stats["completed"] + stats["dropped"] == n
+        eng_stats, sim_stats = stats["planes"]
+        # both vocabularies present on every plane row
+        assert eng_stats["n_requests"] == n // 2
+        assert sim_stats["n_requests"] == n // 2
+        assert sim_stats["completed"] == \
+            sim_stats["on_time"] + sim_stats["missed"]
+
+    def test_affinity_spill_bounds_herding(self):
+        """Pure locality-first herds every hot-prefix request onto the
+        caching plane; a spill bound diverts arrivals once the imbalance
+        exceeds it."""
+        from repro.serving.cluster import AffinityRouter
+        pet = _pet(mean_range=(50, 60))     # slow service: load builds up
+
+        def planes():
+            out = []
+            for pid in range(2):
+                sim = Simulator([], [Machine(mid=1, mtype="m0",
+                                             queue_size=8)],
+                                PETOracle(pet, seed=5 + pid),
+                                SimConfig(heuristic="EDF",
+                                          prefix_cache_blocks=64,
+                                          kv_block_size=16))
+                out.append(Plane(sim, pid=pid))
+            return out
+
+        def drive(policy):
+            router = Router(planes(), policy=policy)
+            sys_prompt = tuple(range(1, 33))
+            rng = np.random.default_rng(0)
+            t = 0.0
+            for i in range(16):
+                toks = sys_prompt + tuple(rng.integers(100, 200,
+                                                       size=8).tolist())
+                router.submit(Task(ttype="generate", data_id=f"d{i}",
+                                   op="generate", params=(), arrival=t,
+                                   deadline=t + 1e6, tokens=toks), t)
+                t += 20.0   # ~1/3 service time: queue builds when herding
+            return router.collect_stats()["router"]["routed"]
+
+        herded = drive(AffinityRouter())
+        spilled = drive(AffinityRouter(spill=1))
+        assert max(herded.values()) > max(spilled.values())
+        assert min(spilled.values()) > min(herded.values())
+
+    def test_engine_plane_rejects_bare_tasks(self):
+        router = Router([Plane(_stub_engine(_pet()))])
+        with pytest.raises(TypeError, match="Requests"):
+            router.submit(Task(ttype="generate", data_id="d", op="generate"),
+                          0.0)
+
+    def test_duplicate_plane_ids_rejected(self):
+        pet = _pet()
+        with pytest.raises(ValueError, match="unique"):
+            Router([Plane(_stub_engine(pet), pid=0),
+                    Plane(_stub_engine(pet), pid=0)])
+
+
+# ---------------------------------------------------------------------------
+# the shared locality term at the heuristics level
+# ---------------------------------------------------------------------------
+
+class TestMappingLocalityTerm:
+    def test_prefix_overlap_breaks_availability_ties(self):
+        """Two idle machines, per-machine prefix scores: the sorted-dispatch
+        family must send the task to the machine holding its blocks."""
+        from repro.core.heuristics import make_heuristic
+        pet = _pet()
+        oracle = PETOracle(pet, seed=0)
+        machines = [Machine(mid=0, mtype="m0"), Machine(mid=1, mtype="m0")]
+        task = Task(ttype="generate", data_id="d", op="generate",
+                    tokens=tuple(range(32)), deadline=1e6)
+        ctx = MappingContext(
+            oracle=oracle,
+            prefix_fn=lambda t, m: 16 if m.mid == 1 else 0)
+        mapped = make_heuristic("EDF").map_batch([task], machines, ctx)
+        assert mapped == [(task, machines[1])]
+        assert ctx.prefix_overlap(task, machines[1]) == 16
+
+    def test_no_prefix_fn_means_zero_and_first_machine(self):
+        pet = _pet()
+        ctx = MappingContext(oracle=PETOracle(pet, seed=0))
+        machines = [Machine(mid=0, mtype="m0"), Machine(mid=1, mtype="m0")]
+        task = Task(ttype="generate", data_id="d", op="generate",
+                    deadline=1e6)
+        from repro.core.heuristics import make_heuristic
+        mapped = make_heuristic("EDF").map_batch([task], machines, ctx)
+        assert mapped == [(task, machines[0])]
+        assert ctx.prefix_overlap(task, machines[0]) == 0

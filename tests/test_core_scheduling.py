@@ -218,6 +218,21 @@ class TestHeuristics:
         make_heuristic("MCT").map_batch(batch, machines, ctx)
         assert all(len(m.queue) >= 1 for m in machines)
 
+    def test_registry_error_path_names_options(self):
+        """The unknown-name message must quote the input and list the
+        registered heuristics (mirrored for the router-policy registry in
+        tests/test_cluster.py)."""
+        with pytest.raises(KeyError, match=r"unknown heuristic 'nope'"):
+            make_heuristic("nope")
+        with pytest.raises(KeyError) as exc:
+            make_heuristic("nope")
+        for name in HEURISTICS:
+            assert name in str(exc.value)
+
+    def test_registry_lookup_is_case_insensitive(self):
+        assert make_heuristic("edf").name == "EDF"
+        assert make_heuristic("pamf").name == "PAMF"
+
 
 # ---------------------------------------------------------------------------
 # end-to-end simulator behaviour
