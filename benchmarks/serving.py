@@ -30,6 +30,7 @@ from repro.core.pruning import PruningConfig
 from repro.core.simulation import PETOracle, SimConfig, Simulator
 from repro.core.tasks import Machine, PETMatrix, Task
 from repro.models import transformer as T
+from repro.serving.autoscale import ElasticityConfig
 from repro.serving.cluster import Plane, Router, make_engine_planes
 from repro.serving.engine import (EngineConfig, ProcessingUnit, Request,
                                   ServingEngine)
@@ -97,7 +98,7 @@ def scheduler_overhead(n_requests: int, csv: Csv, checks: dict) -> list[dict]:
              PruningConfig(initial_defer_threshold=0.1,
                            base_drop_threshold=0.05))):
         eng = ServingEngine(None, None, EngineConfig(
-            n_units=2, max_units=2, elastic=False, merging=merging,
+            n_units=2, elasticity=None, merging=merging,
             heuristic="EDF", pruning=prune, result_cache=False,
             prefix_cache=False), stub_oracle=PETOracle(pet, seed=7))
         trace = _bursty_trace(n_bursts, burst, gap=500.0, deadline=120.0)
@@ -181,7 +182,7 @@ def router_scaling(n_requests: int, csv: Csv, checks: dict) -> list[dict]:
     showing prefix-affinity routing against the paged KV cache."""
     rng = np.random.default_rng(3)
     pet = PETMatrix.generate(["generate"], ["m0"], rng, mean_range=(8, 16))
-    ekw = dict(n_units=1, max_units=1, elastic=False, result_cache=False,
+    ekw = dict(n_units=1, elasticity=None, result_cache=False,
                prefix_cache=False, heuristic="EDF", merging="adaptive")
 
     bare = ServingEngine(None, None, EngineConfig(**ekw),
@@ -254,6 +255,132 @@ def router_scaling(n_requests: int, csv: Csv, checks: dict) -> list[dict]:
     return rows
 
 
+def _elastic_trace(n_phases: int = 4, surge: int = 24, burst: int = 8,
+                   gap: float = 260.0, seed: int = 0):
+    """Alternating load shapes that separate the two elasticity signals.
+
+    A *loose surge* piles up a deep batch queue of slack-deadline work
+    (everything finishes on time on the base pool — depth-triggered
+    scale-up is pure spend) and a *tight burst* brings a shallow queue of
+    urgent work (the depth trigger never fires, but most of it misses
+    without extra capacity).  Success-chance scaling tells the two apart;
+    queue depth cannot."""
+    rng = np.random.default_rng(seed)
+
+    def req(t, deadline):
+        return Request(prompt=tuple(rng.integers(1, 5000, size=8).tolist()),
+                       op="generate", n_new=2, deadline=t + deadline)
+
+    out, t = [], 0.0
+    for _ in range(n_phases):
+        for _ in range(surge):              # deep queue, slack deadlines
+            out.append((t, req(t, 1200.0)))
+            t += 1.0
+        t += gap
+        for _ in range(burst):              # shallow queue, tight deadlines
+            out.append((t, req(t, 45.0)))
+            t += 2.0
+        t += gap
+    return out
+
+
+def _autoscale_elasticity(policy: str) -> ElasticityConfig:
+    return ElasticityConfig(
+        policy=policy, max_extra=3, cooldown=10.0,
+        scale_up_queue=12, scale_down_queue=2,
+        low_chance=0.55, high_chance=0.9,
+        budget_machine_seconds=900.0)
+
+
+def _mirror_tasks(trace):
+    """Simulator tasks via the engine's own similarity-key builder, so both
+    substrates see one workload by construction."""
+    return [r.to_task(t, i) for i, (t, r) in enumerate(trace)]
+
+
+def autoscale_policies(csv: Csv, checks: dict, n_phases: int = 4,
+                       strict: bool = True) -> list[dict]:
+    """Cost/QoS elasticity ladder (DESIGN.md §2.7): the legacy queue
+    hysteresis vs the Ch. 5 success-chance scaler vs the budgeted
+    cost-aware scaler, on the mixed loose-surge/tight-burst trace — one
+    row per (policy x substrate), stub-execution engine and simulator.
+
+    Claim under test: reacting to degrading success probability buys
+    >= QoS at <= machine-seconds versus reacting to queue depth."""
+    rng = np.random.default_rng(17)
+    pet = PETMatrix.generate(["generate"], ["m0"], rng, mean_range=(10, 22))
+    trace = _elastic_trace(n_phases=n_phases)
+    n = len(trace)
+    rows, by_key = [], {}
+    for policy in ("fixed", "queue", "success-chance", "cost-aware"):
+        elasticity = (None if policy == "fixed"
+                      else _autoscale_elasticity(policy))
+        for substrate in ("engine", "simulator"):
+            if substrate == "engine":
+                sub = ServingEngine(None, None, EngineConfig(
+                    n_units=1, heuristic="EDF", merging="none",
+                    result_cache=False, prefix_cache=False,
+                    elasticity=elasticity), stub_oracle=PETOracle(pet, seed=7))
+                t0 = time.perf_counter()
+                stats = sub.run(trace)
+                wall = time.perf_counter() - t0
+            else:
+                sub = Simulator(
+                    _mirror_tasks(trace),
+                    [Machine(mid=1, mtype="m0", queue_size=4)],
+                    PETOracle(pet, seed=7),
+                    SimConfig(heuristic="EDF", merging="none",
+                              elasticity=elasticity))
+                t0 = time.perf_counter()
+                st = sub.run()
+                wall = time.perf_counter() - t0
+                stats = {
+                    "on_time": st.on_time, "missed": st.missed,
+                    "dropped": st.dropped, "scale_ups": st.scale_ups,
+                    "scale_downs": st.scale_downs,
+                    "machine_seconds": st.machine_seconds,
+                    "extra_machine_seconds": st.extra_machine_seconds,
+                    "warmup_ticks": st.warmup_ticks,
+                }
+            ms = stats["machine_seconds"]
+            row = {
+                "policy": policy, "substrate": substrate, "requests": n,
+                "on_time": stats["on_time"], "missed": stats["missed"],
+                "dropped": stats["dropped"],
+                "miss_rate": 1.0 - stats["on_time"] / max(n, 1),
+                "scale_ups": stats["scale_ups"],
+                "scale_downs": stats["scale_downs"],
+                "machine_seconds": ms,
+                "extra_machine_seconds": stats["extra_machine_seconds"],
+                "warmup_ticks": stats["warmup_ticks"],
+                "wall_s": wall,
+            }
+            rows.append(row)
+            by_key[(policy, substrate)] = row
+            csv.add(f"autoscale_{policy}_{substrate}",
+                    on_time=row["on_time"],
+                    scale_ups=row["scale_ups"],
+                    machine_seconds=round(ms, 1))
+            checks[f"autoscale_accounted_{policy}_{substrate}"] = \
+                stats["on_time"] + stats["missed"] + stats["dropped"] == n
+    if strict:
+        for substrate in ("engine", "simulator"):
+            q = by_key[("queue", substrate)]
+            s = by_key[("success-chance", substrate)]
+            c = by_key[("cost-aware", substrate)]
+            # the acceptance claim: >= QoS at <= machine-seconds
+            checks[f"autoscale_qos_{substrate}"] = \
+                s["on_time"] >= q["on_time"]
+            checks[f"autoscale_cost_{substrate}"] = \
+                s["machine_seconds"] <= q["machine_seconds"] * 1.001
+            # the budget gates *scale-up decisions*; busy extras keep
+            # accruing while they drain (one retire per cooldown), so the
+            # guarantee is budget + a bounded in-flight overshoot
+            checks[f"autoscale_budget_{substrate}"] = \
+                c["extra_machine_seconds"] <= 900.0 + 3 * 60.0
+    return rows
+
+
 def run(csv: Csv, n_requests: int = 60) -> dict:
     checks = {}
     cfg, params = _model()
@@ -270,7 +397,7 @@ def run(csv: Csv, n_requests: int = 60) -> dict:
     # --- Fig 6.7: scheduling policies under load ---------------------------
     miss = {}
     for heur in ("FCFS-RR", "EDF", "MU"):
-        ecfg = EngineConfig(n_units=2, max_units=2, elastic=False,
+        ecfg = EngineConfig(n_units=2, elasticity=None,
                             heuristic=heur, merging="none", pruning=None,
                             result_cache=False, max_len=48,
                             batch_buckets=(1,))
@@ -288,7 +415,7 @@ def run(csv: Csv, n_requests: int = 60) -> dict:
              PruningConfig(initial_defer_threshold=0.1,
                            base_drop_threshold=0.05)),
             ("none", "none", None)):
-        ecfg = EngineConfig(n_units=2, max_units=2, elastic=False,
+        ecfg = EngineConfig(n_units=2, elasticity=None,
                             heuristic="EDF", merging=merging, pruning=prune,
                             result_cache=(tag == "full"), max_len=48,
                             batch_buckets=(1, 2, 4))
@@ -309,7 +436,41 @@ def run(csv: Csv, n_requests: int = 60) -> dict:
     rows = scheduler_overhead(max(n_requests * 4, 160), csv, checks)
     # --- front-door router scaling (1/2/4 planes, shared vs per-plane) -----
     router_rows = router_scaling(max(n_requests, 40), csv, checks)
+    # --- autoscale policy ladder (queue vs success-chance vs cost-aware) ---
+    autoscale_rows = autoscale_policies(csv, checks)
     with open(OUT_PATH, "w") as f:
         json.dump({"bench": "serving_control_plane", "rows": rows,
-                   "router_rows": router_rows}, f, indent=1)
+                   "router_rows": router_rows,
+                   "autoscale_rows": autoscale_rows}, f, indent=1)
     return checks
+
+
+if __name__ == "__main__":
+    # CI smoke entry: the autoscale section alone, tiny trace, loose checks
+    # (exercises the SCALER_POLICIES registry, both substrates and the
+    # Pallas-interpret pmf_conv signal path without the model benchmarks)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="autoscale section only, 1 phase, registry/path "
+                         "checks (no QoS-vs-cost assertions)")
+    args = ap.parse_args()
+    csv = Csv("autoscale (smoke)" if args.smoke else "serving")
+    checks: dict = {}
+    if args.smoke:
+        autoscale_rows = autoscale_policies(csv, checks, n_phases=1,
+                                            strict=False)
+        payload = {"bench": "serving_autoscale_smoke",
+                   "autoscale_rows": autoscale_rows}
+        # own artifact: never clobber the full run's BENCH_serving.json
+        smoke_path = OUT_PATH.replace("BENCH_serving",
+                                      "BENCH_autoscale_smoke")
+        with open(smoke_path, "w") as f:
+            json.dump(payload, f, indent=1)
+    else:
+        checks = run(csv)
+    csv.emit()
+    failed = [k for k, ok in checks.items() if not ok]
+    print("checks:", "PASS" if not failed else f"FAIL {failed}")
+    raise SystemExit(1 if failed else 0)

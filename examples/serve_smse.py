@@ -23,6 +23,7 @@ import numpy as np  # noqa: E402
 from repro.configs.registry import get_arch  # noqa: E402
 from repro.core.pruning import PruningConfig  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
+from repro.serving.autoscale import ElasticityConfig  # noqa: E402
 from repro.serving.cluster import Router, make_engine_planes  # noqa: E402
 from repro.serving.engine import EngineConfig, Request  # noqa: E402
 
@@ -41,7 +42,8 @@ def main():
     cfg = get_arch("smollm-360m").reduced().scaled(n_layers=2, remat=False)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     ecfg = EngineConfig(
-        n_units=2, max_units=4, heuristic="EDF", merging=args.merging,
+        n_units=2, elasticity=ElasticityConfig(max_extra=2, cooldown=100.0),
+        heuristic="EDF", merging=args.merging,
         pruning=None if args.no_pruning else PruningConfig(
             initial_defer_threshold=0.1, base_drop_threshold=0.05),
         max_len=64, batch_buckets=(1, 2, 4, 8))

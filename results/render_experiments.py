@@ -136,6 +136,31 @@ def router_scaling_table(path="../BENCH_serving.json"):
     return "\n".join(out)
 
 
+def autoscale_table(path="../BENCH_serving.json"):
+    """Cost/QoS elasticity ladder: queue hysteresis vs success-chance vs
+    cost-aware scaling, engine and simulator substrates (DESIGN.md §2.7;
+    benchmarks/serving.py::autoscale_policies)."""
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return "(run `python -m benchmarks.run --only serving` first)"
+    rows = json.load(open(p)).get("autoscale_rows", [])
+    if not rows:
+        return "(re-run `python -m benchmarks.run --only serving`: " \
+               "no autoscale_rows in BENCH_serving.json)"
+    out = ["| policy | substrate | requests | on-time | miss rate | "
+           "scale ups | scale downs | machine-seconds | extra m-s | "
+           "warmup ticks |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['policy']} | {r['substrate']} | {r['requests']} "
+            f"| {r['on_time']} | {r['miss_rate']:.3f} | {r['scale_ups']} "
+            f"| {r['scale_downs']} | {r['machine_seconds']:.0f} "
+            f"| {r['extra_machine_seconds']:.0f} "
+            f"| {r['warmup_ticks']:.1f} |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     cur = load("dryrun.jsonl")
     base = load("dryrun_baseline.jsonl")
@@ -155,3 +180,6 @@ if __name__ == "__main__":
     print(serving_control_plane_table())
     print("\n## §Front door — router scaling (planes x detector sharing)\n")
     print(router_scaling_table())
+    print("\n## §Autoscale — cost/QoS elasticity policies "
+          "(queue vs success-chance vs cost-aware)\n")
+    print(autoscale_table())

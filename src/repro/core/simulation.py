@@ -14,6 +14,7 @@ same trace and oracle (asserted in tests/test_controlplane.py).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
 
@@ -22,6 +23,9 @@ from .merge_model import VideoExecModel, VideoMeta
 from .pmf import PMF
 from .pruning import PruningConfig
 from .tasks import Machine, PETMatrix, Task
+
+if TYPE_CHECKING:   # core stays importable without the serving package
+    from ..serving.autoscale import ElasticityConfig
 
 __all__ = ["SimConfig", "SimStats", "Simulator", "PETOracle", "VideoOracle"]
 
@@ -117,13 +121,11 @@ class SimConfig:
     # an identical request arriving after a completion is served at zero
     # cost.  Off by default — Ch. 4/5 experiments predate it.
     result_cache: bool = False
-    # elasticity hooks (the engine's queue-length hysteresis, analytically):
-    # up to ``elastic_pool`` clones of machines[0] are added while the batch
-    # queue exceeds ``scale_up_queue`` and retired when it falls below
-    # ``scale_down_queue``.  0 disables.
-    elastic_pool: int = 0
-    scale_up_queue: int = 12
-    scale_down_queue: int = 2
+    # elasticity (DESIGN.md §2.7): the shared autoscale subsystem run
+    # analytically — up to ``elasticity.max_extra`` clones of machines[0]
+    # are added/retired by the configured scaler policy (queue /
+    # success-chance / cost-aware).  None (or max_extra == 0) disables.
+    elasticity: "ElasticityConfig | None" = None
     # analytical paged-KV prefix cache (DESIGN.md §2.4): tasks carrying
     # ``tokens`` reuse the cached prefix and pay only the suffix's share of
     # the prefill.  0 blocks = disabled.  The *same* admission/eviction
@@ -157,8 +159,13 @@ class SimStats:
     mapping_wall_s: float = 0.0
     deadlock_breaks: int = 0
     result_cache_hits: int = 0
+    # autoscale accounting (DESIGN.md §2.7) ------------------------------------
     scale_ups: int = 0
     scale_downs: int = 0
+    scale_decisions: int = 0
+    machine_seconds: float = 0.0        # integral of pool size over time
+    extra_machine_seconds: float = 0.0  # spend above the base pool
+    warmup_ticks: float = 0.0           # virtual time charged to warm-ups
     per_type: dict = field(default_factory=dict)
     per_user_missrate: dict = field(default_factory=dict)
     deferred: int = 0
@@ -210,6 +217,12 @@ class Simulator(Substrate):
         self._result_cache: set = set()
         self._base_pool = len(machines)
         self._extra_mid = max((m.mid for m in machines), default=-1)
+        self.scaler = None
+        if self.cfg.elasticity is not None and self.cfg.elasticity.max_extra > 0:
+            # lazy import: core stays importable without the serving package
+            from ..serving.autoscale import PoolScaler
+            self.scaler = PoolScaler(self.cfg.elasticity,
+                                     _SimMachinePool(self), len(machines))
         self.kvcache = None
         if self.cfg.prefix_cache_blocks > 0:
             # lazy import: core stays importable without the serving package
@@ -265,6 +278,18 @@ class Simulator(Substrate):
         s.mapping_wall_s = c["mapping_wall_s"]
         s.deferred = c["deferred"]
         s.deadlock_breaks = c["deadlock_breaks"]
+        if self.scaler is not None:
+            self.scaler.sync(self.cp.now)
+            sc = self.scaler.stats
+            s.scale_ups = sc["scale_ups"]
+            s.scale_downs = sc["scale_downs"]
+            s.scale_decisions = sc["scale_decisions"]
+            s.machine_seconds = sc["machine_seconds"]
+            s.extra_machine_seconds = sc["extra_machine_seconds"]
+            s.warmup_ticks = sc["warmup_ticks"]
+        else:
+            # fixed pool: the integral degenerates to pool x makespan
+            s.machine_seconds = len(self.machines) * s.makespan
         return s
 
     # -- Substrate: admission -------------------------------------------------
@@ -283,26 +308,9 @@ class Simulator(Substrate):
 
     # -- Substrate: elasticity ------------------------------------------------
     def before_mapping(self, now: float) -> None:
-        if self.cfg.elastic_pool <= 0:
-            return
-        qlen = len(self.cp.batch)
-        if (qlen >= self.cfg.scale_up_queue
-                and len(self.machines) < self._base_pool + self.cfg.elastic_pool):
-            proto = self.machines[0]
-            self._extra_mid += 1
-            self.machines.append(Machine(
-                mid=self._extra_mid, mtype=proto.mtype, speed=proto.speed,
-                queue_size=proto.queue_size, cost_rate=proto.cost_rate,
-                power=proto.power))
-            self.stats.scale_ups += 1
-        elif (qlen <= self.cfg.scale_down_queue
-              and len(self.machines) > self._base_pool):
-            for i in range(len(self.machines) - 1, self._base_pool - 1, -1):
-                m = self.machines[i]
-                if m.running is None and not m.queue and m.busy_until <= now:
-                    self.machines.pop(i)
-                    self.stats.scale_downs += 1
-                    break
+        if self.scaler is not None:
+            self.scaler.step_substrate(now, self.cp, self.machines,
+                                       self.oracle)
 
     # -- Substrate: execution -------------------------------------------------
     def begin_execution(self, task: Task, m: Machine, now: float) -> float:
@@ -374,3 +382,33 @@ class Simulator(Substrate):
         if hit:
             self.kvcache.release(hit)
         self.stats.prefix_evictions = self.kvcache.stats["evictions"]
+
+
+class _SimMachinePool:
+    """Autoscale pool adapter over the simulator's machine list: grows by
+    cloning ``machines[0]`` (payload-free, instant — no warm-up charge) and
+    retires only scaler-added extras, last idle one first."""
+
+    def __init__(self, sim: Simulator):
+        self.sim = sim
+
+    def size(self) -> int:
+        return len(self.sim.machines)
+
+    def grow(self, now: float) -> float:
+        proto = self.sim.machines[0]
+        self.sim._extra_mid += 1
+        self.sim.machines.append(Machine(
+            mid=self.sim._extra_mid, mtype=proto.mtype, speed=proto.speed,
+            queue_size=proto.queue_size, cost_rate=proto.cost_rate,
+            power=proto.power))
+        return 0.0
+
+    def shrink(self, now: float) -> bool:
+        machines = self.sim.machines
+        for i in range(len(machines) - 1, self.sim._base_pool - 1, -1):
+            m = machines[i]
+            if m.running is None and not m.queue and m.busy_until <= now:
+                machines.pop(i)
+                return True
+        return False

@@ -2,12 +2,20 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --requests 100 --merging adaptive --pruning --heuristic EDF \
-        --planes 2 --router affinity
+        --planes 2 --router affinity --autoscale success-chance
 
 ``--planes N`` shards the engine into N planes behind a ``Router``
 (``--router`` picks the policy); the JSON summary carries the aggregate,
 per-plane stats (hits, merges, drops, deadlock_breaks) and the routing
 counters.  ``--planes 1`` reproduces the bare engine exactly.
+
+``--autoscale POLICY`` picks the elasticity policy (``SCALER_POLICIES``:
+queue / success-chance / cost-aware) threaded through to every engine's
+unit pool (``--max-extra-units`` headroom) and — with ``--extra-planes N``
+— to the Router's plane pool (new planes warm-start from plane 0's
+compiled executables).  The autoscale decision counters (scale_ups,
+scale_downs, machine_seconds, warmup_ticks, plane_scale_*) ride in the
+JSON summary.
 """
 
 from __future__ import annotations
@@ -21,7 +29,9 @@ import numpy as np
 from ..configs.registry import get_arch
 from ..core.pruning import PruningConfig
 from ..models import transformer as T
-from ..serving.cluster import ROUTER_POLICIES, Router, make_engine_planes
+from ..serving.autoscale import SCALER_POLICIES, ElasticityConfig
+from ..serving.cluster import (ROUTER_POLICIES, Router,
+                               make_engine_plane_factory, make_engine_planes)
 from ..serving.engine import EngineConfig, Request
 
 
@@ -55,6 +65,15 @@ def main():
                     help="scheduling planes behind the front-door router")
     ap.add_argument("--router", default="least-loaded",
                     choices=sorted(ROUTER_POLICIES))
+    ap.add_argument("--autoscale", default="queue",
+                    choices=sorted(SCALER_POLICIES),
+                    help="elasticity policy for unit pools (and the plane "
+                         "pool with --extra-planes)")
+    ap.add_argument("--max-extra-units", type=int, default=2,
+                    help="per-engine unit-pool headroom (0 disables)")
+    ap.add_argument("--extra-planes", type=int, default=0,
+                    help="plane-pool headroom for router autoscaling "
+                         "(0 disables)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced().scaled(n_layers=2, remat=False)
@@ -64,9 +83,20 @@ def main():
         pruning=PruningConfig(initial_defer_threshold=0.15,
                               base_drop_threshold=0.1)
         if args.pruning else None,
+        elasticity=ElasticityConfig(policy=args.autoscale,
+                                    max_extra=args.max_extra_units,
+                                    cooldown=100.0),
         max_len=64)
-    router = Router(make_engine_planes(cfg, params, ecfg, args.planes),
-                    policy=args.router)
+    planes = make_engine_planes(cfg, params, ecfg, args.planes)
+    autoscale = plane_factory = None
+    if args.extra_planes > 0:
+        autoscale = ElasticityConfig(policy=args.autoscale,
+                                     max_extra=args.extra_planes,
+                                     cooldown=100.0)
+        plane_factory = make_engine_plane_factory(
+            cfg, params, ecfg, warm_fns=planes[0].sub.warm_fns)
+    router = Router(planes, policy=args.router, autoscale=autoscale,
+                    plane_factory=plane_factory)
     trace = synth_trace(args.requests, cfg.vocab, rate=args.rate,
                         deadline=args.deadline)
     stats = router.run(trace)

@@ -1,0 +1,106 @@
+"""The PoolScaler driver: policy decisions applied to a concrete pool.
+
+One driver serves all three elasticity levels: the serving engine's
+processing units, the simulator's machine clones, and the Router's planes
+each expose a tiny pool adapter (size / grow / shrink) and call
+``step(now, signals)`` from their scaling seam (``Substrate.
+before_mapping`` for substrates, ``Router.submit`` for the plane pool).
+The driver owns what every level shares: the base-pool floor and
+``max_extra`` ceiling, the cooldown, and per-decision accounting —
+``scale_ups``/``scale_downs``, the machine-seconds integral (total and
+above-base), and warm-up charges — surfaced uniformly through each
+owner's ``collect_stats()``.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol
+
+from .config import ElasticityConfig
+from .policies import make_scaler_policy
+from .signals import ScaleSignals, substrate_signals
+
+__all__ = ["MachinePool", "PoolScaler"]
+
+
+class MachinePool(Protocol):
+    """What the driver needs from a concrete pool."""
+
+    def size(self) -> int: ...
+
+    def grow(self, now: float) -> float | None:
+        """Add one unit; return its warm-up charge in virtual ticks
+        (0.0 for instant starts), or None when the pool cannot grow."""
+
+    def shrink(self, now: float) -> bool:
+        """Retire one idle unit (never lose queued work); False when no
+        unit is currently retirable."""
+
+
+class PoolScaler:
+    def __init__(self, cfg: ElasticityConfig, pool: MachinePool,
+                 base_units: int):
+        self.cfg = cfg
+        self.pool = pool
+        self.base = base_units
+        self.policy = make_scaler_policy(cfg.policy, cfg)
+        self.stats = {"scale_ups": 0, "scale_downs": 0,
+                      "scale_decisions": 0, "machine_seconds": 0.0,
+                      "extra_machine_seconds": 0.0, "warmup_ticks": 0.0}
+        self._last = 0.0
+        self._cooldown_until = 0.0
+
+    # -- cost accounting ------------------------------------------------------
+    def sync(self, now: float) -> None:
+        """Advance the machine-seconds integral to ``now`` (idempotent)."""
+        dt = now - self._last
+        if dt <= 0.0:
+            return
+        n = self.pool.size()
+        self.stats["machine_seconds"] += n * dt
+        self.stats["extra_machine_seconds"] += max(n - self.base, 0) * dt
+        self._last = now
+
+    @property
+    def extra_machine_seconds(self) -> float:
+        return self.stats["extra_machine_seconds"]
+
+    # -- the decision step ----------------------------------------------------
+    def step(self, now: float, sig: ScaleSignals) -> int:
+        """Evaluate one scaling decision; returns the action taken
+        (-1 retired a unit, 0 held, +1 added one)."""
+        self.sync(now)
+        # the signal snapshot may have been built before the sync: refresh
+        # the spend so the cost-aware budget gate sees the integral *as of
+        # now*, not as of the previous decision
+        sig.extra_machine_seconds = self.extra_machine_seconds
+        # a stateful policy's EWMA (cost-aware) observes every decision
+        # point — it must keep decaying/charging through cooldown windows,
+        # which only suppress *actions*; a stateless policy's verdict would
+        # be discarded, so skip its (possibly kernel-launching) evaluation
+        in_cooldown = now < self._cooldown_until
+        if in_cooldown and not self.policy.stateful:
+            return 0
+        act = self.policy.decide(sig)
+        self.stats["scale_decisions"] += 1
+        if in_cooldown:
+            return 0
+        if act > 0 and self.pool.size() < self.base + self.cfg.max_extra:
+            charge = self.pool.grow(now)
+            if charge is not None:
+                self.stats["scale_ups"] += 1
+                self.stats["warmup_ticks"] += charge
+                self._cooldown_until = now + self.cfg.cooldown
+                return 1
+        elif act < 0 and self.pool.size() > self.base:
+            if self.pool.shrink(now):
+                self.stats["scale_downs"] += 1
+                self._cooldown_until = now + self.cfg.cooldown
+                return -1
+        return 0
+
+    def step_substrate(self, now: float, cp, machines, oracle) -> int:
+        """``step`` with signals built from a control-plane substrate —
+        the one-liner engines and simulators call from ``before_mapping``."""
+        return self.step(now, substrate_signals(self, cp, machines, oracle,
+                                                now))

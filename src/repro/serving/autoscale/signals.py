@@ -1,0 +1,165 @@
+"""Ch. 5 chance-of-success signals for elasticity decisions.
+
+The pruning chapter derives per-batch *chance-of-success* values from
+PET/PCT convolutions and argues the system should react to degrading
+success probability — not raw queue depth — when deciding how aggressively
+to spend resources.  ``batch_chances`` is that signal for one scaling
+decision: every queued task's probability of meeting its deadline given
+the machine pool as it stands, evaluated in a single batched ``pmf_conv``
+launch (interpret-mode Pallas) so the controller's overhead stays
+amortized per mapping event, with a pure-NumPy ``chance_of_success`` path
+as the fallback (companion-survey framing: keep the control loop's
+success-probability evaluation approximate and cheap).
+
+Approximation contract (this is a *control signal*, not the pruner):
+
+* machines with a pruner attached contribute their real, memoized tail PCT
+  chain (``Pruner.machine_pcts``); machines without one contribute an
+  impulse at their mean-stacked availability time;
+* batch tasks are greedily stacked onto the earliest-available machine,
+  later tasks seeing earlier ones as a mean-time shift of the tail — so a
+  long queue genuinely degrades the aggregate chance instead of every task
+  scoring against an idle pool.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.pmf import PMF, chance_of_success
+
+__all__ = ["ScaleSignals", "batch_chances"]
+
+
+def _kernel_success(pets, pcts, dls, grid: int, pad_to: int = 0):
+    """Batched kernel path; None when JAX/the kernel is unavailable
+    (kernel *errors* propagate — they must not silently degrade).
+
+    Rows are padded to ``pad_to`` with zero-success filler so the jitted
+    ``pmf_conv`` sees one fixed (N, grid) shape across decisions — the
+    batch size otherwise varies per mapping event and every new size would
+    retrace/recompile on the controller's hot path."""
+    try:
+        from ...kernels.pmf_conv.ops import batched_success
+    except ImportError:         # pragma: no cover - jax-less installs
+        return None
+    n = len(pets)
+    if pad_to > n:
+        filler = PMF.impulse(0)
+        pets = pets + [filler] * (pad_to - n)
+        pcts = pcts + [filler] * (pad_to - n)
+        dls = list(dls) + [-1] * (pad_to - n)   # dl<0: success 0, sliced off
+    return np.asarray(batched_success(pets, pcts, dls, length=grid))[:n]
+
+
+def batch_chances(batch, machines, oracle, now: float, pruner=None, *,
+                  signal_tasks: int = 32, grid: int = 64,
+                  use_kernel: bool = True) -> np.ndarray:
+    """Per-task success chance over (a prefix of) the batch queue.
+
+    Returns a float array of len ``min(len(batch), signal_tasks)``; empty
+    when there is nothing queued or no machines to run it on.
+    """
+    if not batch or not machines:
+        return np.zeros(0)
+    tasks = batch[:signal_tasks]
+
+    # per-machine state: mean-stacked availability + tail PCT of the real
+    # queue (the pruner's memoized chain when one is attached)
+    avail, tails, extra = {}, {}, {}
+    for m in machines:
+        t = max(now, m.run_end if m.running is not None else now)
+        for q in m.queue:
+            mu, _ = oracle.mean_std(q, m)
+            t += mu
+        avail[m.mid] = t
+        extra[m.mid] = 0.0
+        tail = None
+        if pruner is not None:
+            chain = pruner.machine_pcts(m, now)
+            tail = chain[-1][1] if chain else None
+        tails[m.mid] = tail
+
+    pets, pcts, dls, idx = [], [], [], []
+    out = np.zeros(len(tasks))
+    for i, task in enumerate(tasks):
+        m = min(machines, key=lambda mm: (avail[mm.mid], mm.mid))
+        start = avail[m.mid]
+        dl = task.effective_deadline
+        mu, _ = oracle.mean_std(task, m)
+        # stacking accrues for *every* scored task — slack (even
+        # infinite-deadline) work still occupies the machine ahead of
+        # whatever queues behind it
+        avail[m.mid] = start + mu
+        shift = extra[m.mid]
+        extra[m.mid] += mu
+        if not np.isfinite(dl):
+            out[i] = 1.0
+            continue
+        tail = tails[m.mid]
+        if tail is None:
+            pct = PMF.impulse(int(round(start)))
+        else:
+            pct = tail.shift(int(round(shift)))
+        pets.append(oracle.pmf(task, m))
+        pcts.append(pct)
+        dls.append(int(dl))
+        idx.append(i)
+
+    if not pets:
+        return out
+    suc = (_kernel_success(pets, pcts, dls, grid, pad_to=signal_tasks)
+           if use_kernel else None)
+    if suc is None:
+        suc = np.array([chance_of_success(pe, pc, dl)
+                        for pe, pc, dl in zip(pets, pcts, dls)])
+    out[np.asarray(idx)] = np.clip(suc, 0.0, 1.0)
+    return out
+
+
+def substrate_signals(scaler, cp, machines, oracle, now: float):
+    """``ScaleSignals`` for a control-plane substrate (engine/simulator):
+    queue depth from the shared batch queue, lazy chance array over the
+    substrate's machines and oracle, pruner-backed tails when one is
+    attached."""
+    cfg = scaler.cfg
+    return ScaleSignals(
+        now, len(cp.batch),
+        chances_fn=lambda: batch_chances(
+            cp.batch, machines, oracle, now, pruner=cp.pruner,
+            signal_tasks=cfg.signal_tasks, grid=cfg.signal_grid,
+            use_kernel=cfg.use_kernel),
+        extra_machine_seconds=scaler.extra_machine_seconds)
+
+
+class ScaleSignals:
+    """What a scaler policy may consult for one decision.
+
+    The chance array is lazy and memoized: the ``queue`` policy never pays
+    a convolution, and the probabilistic policies share one batched kernel
+    launch between ``chance()`` and ``at_risk()``.
+    """
+
+    def __init__(self, now: float, qlen: int, chances_fn=None,
+                 extra_machine_seconds: float = 0.0):
+        self.now = now
+        self.qlen = qlen
+        self.extra_machine_seconds = extra_machine_seconds
+        self._fn = chances_fn
+        self._chances = None
+
+    def chances(self) -> np.ndarray:
+        if self._chances is None:
+            self._chances = (np.zeros(0) if self._fn is None
+                             else np.asarray(self._fn()))
+        return self._chances
+
+    def chance(self) -> float:
+        """Aggregate (mean) success chance; 1.0 with an empty queue."""
+        c = self.chances()
+        return float(c.mean()) if c.size else 1.0
+
+    def at_risk(self, threshold: float) -> int:
+        """Queued tasks whose individual success chance is <= threshold."""
+        c = self.chances()
+        return int((c <= threshold).sum()) if c.size else 0

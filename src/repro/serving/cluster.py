@@ -37,12 +37,16 @@ from __future__ import annotations
 import dataclasses
 import itertools
 
+import numpy as np
+
 from ..core.simulation import Simulator
 from ..core.tasks import Task
+from .autoscale import (ElasticityConfig, PoolScaler, ScaleSignals,
+                        batch_chances)
 
 __all__ = ["Plane", "Router", "RouterPolicy", "RoutingContext",
            "CrossPlaneLookup", "ROUTER_POLICIES", "make_router_policy",
-           "make_engine_planes"]
+           "make_engine_planes", "make_engine_plane_factory"]
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +98,13 @@ class Plane:
             if m.running is not None and not m.running.is_placeholder:
                 n += 1
         return n
+
+    def idle(self) -> bool:
+        """No outstanding work *and* no pending events — ``load`` alone
+        cannot see a scheduled-but-not-yet-ingested arrival (same-instant
+        submits sit in the event heap until the plane advances past them),
+        and retiring such a plane would strand the request."""
+        return self.load() == 0 and not self.cp._events
 
     def prefix_overlap(self, tokens) -> int:
         """Cached-prefix tokens this plane already holds for ``tokens`` —
@@ -306,9 +317,19 @@ class Router:
     schedules the arrival.  With one plane this reproduces the bare engine's
     decision sequence exactly: event order is (time, arrival-before-other,
     push-order), all three of which are submission-order-invariant.
+
+    With ``autoscale=ElasticityConfig(...)`` + a ``plane_factory`` the
+    front door also runs *plane-count* elasticity (DESIGN.md §2.7): the
+    same ``SCALER_POLICIES`` decide from the cross-plane aggregate success
+    chance whether to add a whole plane (warm-started through the factory)
+    or retire an idle scaler-added one; decisions are evaluated per
+    submission, and the accounting (``plane_scale_ups`` etc.) rides in
+    ``collect_stats()['router']['autoscale']``.
     """
 
-    def __init__(self, planes, policy="least-loaded", shared_detector=True):
+    def __init__(self, planes, policy="least-loaded", shared_detector=True,
+                 autoscale: ElasticityConfig | None = None,
+                 plane_factory=None):
         self.planes = [p if isinstance(p, Plane) else Plane(p, pid=i)
                        for i, p in enumerate(planes)]
         if len({p.pid for p in self.planes}) != len(self.planes):
@@ -323,6 +344,17 @@ class Router:
         self.stats = {"submitted": 0, "affinity_hits": 0,
                       "prefix_affinity": 0,
                       "routed": {p.pid: 0 for p in self.planes}}
+        # -- plane-count autoscaling (DESIGN.md §2.7, level 2) ----------------
+        #: planes retired by the scaler; kept for stats aggregation
+        self.retired: list[Plane] = []
+        self._base_pids = {p.pid for p in self.planes}
+        self.plane_scaler = None
+        if autoscale is not None and autoscale.max_extra > 0:
+            if plane_factory is None:
+                raise ValueError("plane-count autoscaling needs a "
+                                 "plane_factory(pid) -> substrate | Plane")
+            self.plane_scaler = PoolScaler(
+                autoscale, _PlanePool(self, plane_factory), len(self.planes))
 
     # -- streaming session API ------------------------------------------------
     def submit(self, item, t: float) -> Plane:
@@ -331,6 +363,8 @@ class Router:
         targets, cache residency — are current); returns the chosen
         plane."""
         self.step(t)
+        if self.plane_scaler is not None:
+            self.plane_scaler.step(t, self._plane_signals(t))
         ctx = RoutingContext(_probe(item, t), t, shared=self.shared)
         plane, reason = self.policy.choose(self.planes, ctx)
         plane.cp.schedule_arrival(t, plane.adapt(item, t))
@@ -350,9 +384,31 @@ class Router:
 
     def drain(self) -> dict:
         """Run every plane to quiescence and aggregate statistics."""
-        for p in self.planes:
+        for p in self.planes + self.retired:
             p.cp.run()
         return self.collect_stats()
+
+    # -- plane-count autoscaling ----------------------------------------------
+    def _plane_signals(self, now: float) -> ScaleSignals:
+        """Cross-plane aggregate for the plane scaler: total queued work and
+        the concatenated per-plane success-chance arrays (every plane scored
+        with its own machines, oracle and — when attached — pruner)."""
+        cfg = self.plane_scaler.cfg
+
+        def chances():
+            arrs = [batch_chances(p.cp.batch, p.sub.machines, p.sub.oracle,
+                                  p.now, pruner=p.cp.pruner,
+                                  signal_tasks=cfg.signal_tasks,
+                                  grid=cfg.signal_grid,
+                                  use_kernel=cfg.use_kernel)
+                    for p in self.planes]
+            arrs = [a for a in arrs if a.size]
+            return np.concatenate(arrs) if arrs else np.zeros(0)
+
+        return ScaleSignals(
+            now, sum(len(p.cp.batch) for p in self.planes),
+            chances_fn=chances,
+            extra_machine_seconds=self.plane_scaler.extra_machine_seconds)
 
     # -- closed-trace compatibility -------------------------------------------
     def run(self, trace) -> dict:
@@ -372,11 +428,12 @@ class Router:
     _MAX_KEYS = frozenset({"makespan", "last_completion"})
 
     def collect_stats(self) -> dict:
-        """Aggregate numeric stats across planes (sums; clock-like keys by
-        max); per-plane dicts under ``planes`` and routing counters under
-        ``router``."""
+        """Aggregate numeric stats across planes — active *and* retired, so
+        work done on a scaler-retired plane never vanishes (sums; clock-like
+        keys by max); per-plane dicts under ``planes`` and routing counters
+        under ``router``."""
         per_plane, agg = [], {}
-        for p in self.planes:
+        for p in self.planes + self.retired:
             d = p.stats_dict()
             per_plane.append({"plane": p.pid, "name": p.name, **d})
             for k, v in d.items():
@@ -393,7 +450,68 @@ class Router:
             "routed": {str(pid): n
                        for pid, n in sorted(self.stats["routed"].items())},
         }
+        if self.plane_scaler is not None:
+            self.plane_scaler.sync(max((p.now for p in self.planes),
+                                       default=0.0))
+            sc = self.plane_scaler.stats
+            agg["router"]["autoscale"] = {
+                "policy": self.plane_scaler.cfg.policy,
+                "plane_scale_ups": sc["scale_ups"],
+                "plane_scale_downs": sc["scale_downs"],
+                "scale_decisions": sc["scale_decisions"],
+                "plane_seconds": sc["machine_seconds"],
+                "extra_plane_seconds": sc["extra_machine_seconds"],
+            }
         return agg
+
+
+# ---------------------------------------------------------------------------
+# plane-pool adapter (whole-plane elasticity behind the PoolScaler driver)
+# ---------------------------------------------------------------------------
+
+class _PlanePool:
+    """Autoscale pool adapter over the Router's plane list.
+
+    ``grow`` asks the factory for a fresh substrate (engine factories
+    warm-start it from an existing plane's compiled executables — the
+    warm-container ladder) and registers it with the live routing state:
+    appending to ``Router.planes`` is enough because the shared
+    ``CrossPlaneLookup`` views that same list.  ``shrink`` retires only
+    scaler-added planes (never the constructor's base planes) that are
+    fully idle, moving them to ``Router.retired`` so their stats survive
+    aggregation.
+    """
+
+    def __init__(self, router: "Router", factory):
+        self.router = router
+        self.factory = factory
+
+    def size(self) -> int:
+        return len(self.router.planes)
+
+    def grow(self, now: float) -> float:
+        r = self.router
+        pid = 1 + max(p.pid for p in r.planes + r.retired)
+        plane = self.factory(pid)
+        if not isinstance(plane, Plane):
+            plane = Plane(plane, pid=pid)
+        elif plane.pid != pid:
+            raise ValueError(f"plane_factory must use the given pid {pid}, "
+                             f"got {plane.pid}")
+        r.planes.append(plane)
+        r.stats["routed"].setdefault(plane.pid, 0)
+        return 0.0
+
+    def shrink(self, now: float) -> bool:
+        r = self.router
+        for i in range(len(r.planes) - 1, -1, -1):
+            p = r.planes[i]
+            if p.pid in r._base_pids or not p.idle():
+                continue
+            r.planes.pop(i)
+            r.retired.append(p)
+            return True
+        return False
 
 
 # ---------------------------------------------------------------------------
@@ -416,3 +534,18 @@ def make_engine_planes(model_cfg, params, cfg, n_planes: int,
             warm = eng.warm_fns
         planes.append(Plane(eng, pid=i))
     return planes
+
+
+def make_engine_plane_factory(model_cfg, params, cfg, warm_fns=None,
+                              stub_oracle_fn=None):
+    """``plane_factory`` for ``Router(autoscale=...)`` over engine planes:
+    live engines warm-start from ``warm_fns`` (pass plane 0's
+    ``ServingEngine.warm_fns``), stub engines draw one oracle per pid from
+    ``stub_oracle_fn``."""
+    from .engine import ServingEngine   # lazy: keep this module JAX-free
+
+    def factory(pid: int):
+        oracle = stub_oracle_fn(pid) if stub_oracle_fn is not None else None
+        return ServingEngine(model_cfg, params, cfg, stub_oracle=oracle,
+                             warm_fns=None if oracle is not None else warm_fns)
+    return factory

@@ -45,6 +45,7 @@ from ..core.pmf import PMF
 from ..core.pruning import PruningConfig
 from ..core.tasks import Machine, Task
 from ..models import transformer as T
+from .autoscale import ElasticityConfig, PoolScaler
 from .kvcache import PrefixKVCache
 
 
@@ -261,17 +262,21 @@ TICKS_PER_SEC = 100     # engine time unit: 1 tick = 10 ms
 @dataclass
 class EngineConfig:
     n_units: int = 2
-    max_units: int = 8
-    min_units: int = 1
     heuristic: str = "EDF"
     merging: str = "adaptive"          # none|conservative|aggressive|adaptive
     position_finder: str | None = None  # None|"linear"|"log" (Section 4.4.5)
     pruning: PruningConfig | None = None
     alpha: float = 2.0                 # base worst-case coefficient (Eq. 4.1)
     result_cache: bool = True
-    elastic: bool = True
-    scale_up_queue: int = 12           # batch-queue length to add a unit
-    scale_down_queue: int = 2
+    # autoscale subsystem (DESIGN.md §2.7): policy-driven elasticity of the
+    # unit pool above the ``n_units`` base (None or max_extra==0 disables).
+    # The default reproduces the legacy queue hysteresis at the default
+    # pool (n_units=2 + 6 extra = the old 8-unit ceiling; 12/2 thresholds,
+    # 100-tick cooldown).  Note the ceiling is *relative* now: a
+    # non-default n_units shifts it, so pin max_extra when that matters.
+    elasticity: ElasticityConfig | None = field(
+        default_factory=lambda: ElasticityConfig(
+            policy="queue", max_extra=6, cooldown=100.0))
     max_len: int = 128
     merge_degree_cap: int = 5
     time_scale: float = float(TICKS_PER_SEC)  # virtual ticks per wall second
@@ -335,10 +340,13 @@ class ServingEngine(Substrate):
         self.stats = {"completed": 0, "on_time": 0, "missed": 0, "merges": 0,
                       "merge_rejected": 0, "cache_hits": 0, "dropped": 0,
                       "cold_starts": 0, "warm_starts": 0, "scale_ups": 0,
-                      "scale_downs": 0, "executions": 0, "mapping_events": 0,
-                      "deferred": 0, "deadlock_breaks": 0,
-                      "mapping_wall_s": 0.0, "prefix_hits": 0,
-                      "prefix_candidates": 0, "prefix_tokens_reused": 0,
+                      "scale_downs": 0, "scale_decisions": 0,
+                      "machine_seconds": 0.0, "extra_machine_seconds": 0.0,
+                      "warmup_ticks": 0.0, "executions": 0,
+                      "mapping_events": 0, "deferred": 0,
+                      "deadlock_breaks": 0, "mapping_wall_s": 0.0,
+                      "prefix_hits": 0, "prefix_candidates": 0,
+                      "prefix_tokens_reused": 0,
                       "prefill_tokens": 0}  # prefix_* mirrored from kvcache
         self.cp = ControlPlane(self, cfg.control())
         self.kvcache = None
@@ -358,6 +366,10 @@ class ServingEngine(Substrate):
         self._rid = 0
         for _ in range(cfg.n_units):
             self._add_unit()
+        self.scaler = None
+        if cfg.elasticity is not None and cfg.elasticity.max_extra > 0:
+            self.scaler = PoolScaler(cfg.elasticity, _EngineUnitPool(self),
+                                     cfg.n_units)
 
     # -- control-plane delegation --------------------------------------------
     @property
@@ -392,7 +404,8 @@ class ServingEngine(Substrate):
         return getattr(self, "_warm_fns", None)
 
     # -- elasticity -----------------------------------------------------------
-    def _add_unit(self):
+    def _add_unit(self) -> float:
+        """Start one unit; returns its warm-up charge in virtual ticks."""
         uid = self._next_uid = getattr(self, "_next_uid", 0) + 1
         shared = self.units[0].fns if self.units else \
             (self._warm_fns if getattr(self, "_warm_fns", None) else None)
@@ -410,32 +423,17 @@ class ServingEngine(Substrate):
         # initial units are pre-warmed before traffic opens (the thesis's
         # SMSE starts its processing units ahead of the stream); cold/warm
         # start-up charges virtual time only for mid-run elastic scale-ups
+        charge = 0.0
         if self.clock > 0 and cold > 0:
-            self.cp.note_warmup(unit.machine,
-                                self.clock + cold * self.cfg.time_scale)
+            charge = cold * self.cfg.time_scale
+            self.cp.note_warmup(unit.machine, self.clock + charge)
         self.units.append(unit)
+        return charge
 
     def before_mapping(self, now: float) -> None:
-        if not self.cfg.elastic:
-            return
-        if now < getattr(self, "_scale_cooldown", 0.0):
-            return
-        qlen = len(self.batch)
-        if qlen >= self.cfg.scale_up_queue and \
-                len(self.units) < self.cfg.max_units:
-            self._add_unit()
-            self.stats["scale_ups"] += 1
-            self._scale_cooldown = now + 100.0
-        elif qlen <= self.cfg.scale_down_queue and \
-                len(self.units) > max(self.cfg.min_units, self.cfg.n_units):
-            # retire only an idle, empty unit (never lose queued work)
-            for i in range(len(self.units) - 1, -1, -1):
-                m = self.units[i].machine
-                if not m.queue and m.running is None and m.busy_until <= now:
-                    self.units.pop(i)
-                    self.stats["scale_downs"] += 1
-                    self._scale_cooldown = now + 100.0
-                    break
+        if self.scaler is not None:
+            self.scaler.step_substrate(now, self.cp, self.machines,
+                                       self.oracle)
 
     # -- ingestion (Ch. 4 front door) ----------------------------------------
     def ingest(self, req: Request, now: float) -> Task | None:
@@ -605,6 +603,15 @@ class ServingEngine(Substrate):
         self.stats["deferred"] = c["deferred"]
         self.stats["deadlock_breaks"] = c["deadlock_breaks"]
         self.stats["mapping_wall_s"] = c["mapping_wall_s"]
+        if self.scaler is not None:
+            self.scaler.sync(self.cp.now)
+            self.stats.update({k: self.scaler.stats[k] for k in (
+                "scale_ups", "scale_downs", "scale_decisions",
+                "machine_seconds", "extra_machine_seconds", "warmup_ticks")})
+        else:
+            # fixed pool: the integral degenerates to pool x makespan
+            self.stats["machine_seconds"] = \
+                len(self.units) * c["last_completion"]
         out = dict(self.stats)
         if self.kvcache is not None:
             # the cache's own counters are authoritative — the engine only
@@ -648,3 +655,28 @@ class _EngineOracle:
     def pmf(self, task: Task, machine) -> PMF:
         mu, sd = self.mean_std(task, machine)   # already in integer ticks
         return PMF.from_normal(max(mu, 1.0), max(sd, 0.5))
+
+
+class _EngineUnitPool:
+    """Autoscale pool adapter over the engine's processing units: grows
+    through ``_add_unit`` (warm-starting from the shared executables and
+    charging compile time via ``note_warmup``) and retires the last idle,
+    empty unit — never losing queued work."""
+
+    def __init__(self, eng: ServingEngine):
+        self.eng = eng
+
+    def size(self) -> int:
+        return len(self.eng.units)
+
+    def grow(self, now: float) -> float:
+        return self.eng._add_unit()
+
+    def shrink(self, now: float) -> bool:
+        units = self.eng.units
+        for i in range(len(units) - 1, -1, -1):
+            m = units[i].machine
+            if not m.queue and m.running is None and m.busy_until <= now:
+                units.pop(i)
+                return True
+        return False

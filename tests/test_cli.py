@@ -33,6 +33,15 @@ def test_serve_cli(tmp_path):
     assert '"completed"' in out
 
 
+def test_serve_cli_autoscale():
+    out = _run(["repro.launch.serve", "--requests", "10", "--units", "1",
+                "--rate", "0.5", "--autoscale", "success-chance",
+                "--max-extra-units", "1"])
+    # the autoscale decision counters ride in the JSON summary
+    assert '"scale_ups"' in out and '"machine_seconds"' in out
+    assert '"warmup_ticks"' in out
+
+
 def test_serve_cli_multiplane():
     out = _run(["repro.launch.serve", "--requests", "10", "--units", "1",
                 "--planes", "2", "--router", "affinity", "--rate", "0.5"])

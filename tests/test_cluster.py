@@ -42,7 +42,7 @@ def _stub_engine(pet, n_units=2, **cfg_kw):
     cfg_kw.setdefault("heuristic", "EDF")
     cfg_kw.setdefault("merging", "adaptive")
     return ServingEngine(None, None, EngineConfig(
-        n_units=n_units, max_units=n_units, elastic=False,
+        n_units=n_units, elasticity=None,
         result_cache=False, prefix_cache=False, **cfg_kw),
         stub_oracle=PETOracle(pet, seed=11))
 

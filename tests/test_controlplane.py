@@ -10,6 +10,7 @@ from repro.core.controlplane import ControlConfig, ControlPlane, Substrate
 from repro.core.pruning import PruningConfig
 from repro.core.simulation import PETOracle, SimConfig, Simulator
 from repro.core.tasks import Machine, PETMatrix, Task
+from repro.serving.autoscale import ElasticityConfig
 from repro.serving.engine import EngineConfig, Request, ServingEngine
 
 
@@ -184,12 +185,15 @@ class TestSimulatorNewFeatures:
         tasks = _sim_tasks(60, span=5.0, deadline=1e6)
         sim = Simulator(tasks, [Machine(mid=0, mtype="m0", queue_size=2)],
                         PETOracle(_pet()),
-                        SimConfig(elastic_pool=3, scale_up_queue=6,
-                                  scale_down_queue=1))
+                        SimConfig(elasticity=ElasticityConfig(
+                            max_extra=3, scale_up_queue=6,
+                            scale_down_queue=1)))
         st = sim.run()
         assert st.scale_ups > 0
         assert st.on_time + st.missed + st.dropped == 60
         assert len(sim.machines) <= 1 + 3
+        assert st.machine_seconds > 0.0
+        assert st.extra_machine_seconds > 0.0
 
     def test_engine_only_alpha_now_configurable(self):
         # the conservative gate at a relaxed alpha merges at least as often
@@ -254,7 +258,7 @@ class TestDecisionEquivalence:
         n_units = 2
 
         eng = ServingEngine(None, None, EngineConfig(
-            n_units=n_units, max_units=n_units, elastic=False,
+            n_units=n_units, elasticity=None,
             result_cache=False, prefix_cache=False, **cfg_kw),
             stub_oracle=PETOracle(pet, seed=11))
         eng.cp.trace = []
@@ -294,7 +298,7 @@ class TestDecisionEquivalence:
         trace = _request_trace(n=40, seed=1, deadline=20.0, rate=2.0)
 
         eng = ServingEngine(None, None, EngineConfig(
-            n_units=1, max_units=1, elastic=False, result_cache=False,
+            n_units=1, elasticity=None, result_cache=False,
             prefix_cache=False, **cfg_kw),
             stub_oracle=PETOracle(pet, seed=11))
         eng.cp.trace = []
@@ -320,7 +324,7 @@ class TestDecisionEquivalence:
         from repro.core.pmf import DropMode
         pet = _pet(seed=2, mean_range=(30, 60))
         eng = ServingEngine(None, None, EngineConfig(
-            n_units=1, max_units=1, elastic=False, result_cache=False,
+            n_units=1, elasticity=None, result_cache=False,
             prefix_cache=False, heuristic="EDF", merging="none",
             pruning=PruningConfig(drop_mode=DropMode.EVICT_DROP,
                                   drop_running=True, lam=1.0, toggle_on=1.0,
@@ -339,7 +343,7 @@ class TestDecisionEquivalence:
         otherwise the equivalence assertion is vacuous."""
         pet = _pet(seed=3, mean_range=(8, 16))
         eng = ServingEngine(None, None, EngineConfig(
-            n_units=1, max_units=1, elastic=False, result_cache=False,
+            n_units=1, elasticity=None, result_cache=False,
             prefix_cache=False, heuristic="FCFS-RR", merging="aggressive"),
             stub_oracle=PETOracle(pet, seed=11))
         eng.cp.trace = []

@@ -1,0 +1,119 @@
+"""Coverage for core/oversubscription.py: the OSL -> adaptive-alpha map
+(Eq. 4.3 / §4.5.3) and the Eq. 5.11 EWMA + Schmitt-trigger DropToggle that
+both the pruner and the cost-aware autoscaler build on."""
+
+import pytest
+
+from repro.core.oversubscription import (DropToggle, adaptive_alpha,
+                                         oversubscription_level)
+from repro.core.tasks import Machine, Task
+
+
+def _task(deadline, arrival=0.0):
+    return Task(ttype="t0", data_id="d", op="op", arrival=arrival,
+                deadline=deadline)
+
+
+class TestDropToggle:
+    def test_engages_at_on_level_and_holds_through_noise(self):
+        """A noisy miss sequence oscillating across the on-level (but above
+        the off-level) must produce exactly one engage transition — no
+        chatter (Section 5.3.5's 20% separation is the point)."""
+        tg = DropToggle(lam=0.5, on_level=2.0)
+        assert tg.off_level == pytest.approx(1.6)
+        states = [tg.observe(m) for m in (3, 3, 1, 3, 1, 3, 1, 3)]
+        # d: 1.5, 2.25*, 1.625, 2.3125, 1.656, 2.328, 1.664, 2.332 — the
+        # dips stay above off_level, so once engaged it stays engaged
+        assert states[0] is False
+        assert all(states[1:])
+        transitions = sum(1 for a, b in zip([False] + states, states)
+                          if a != b)
+        assert transitions == 1
+
+    def test_without_schmitt_the_same_sequence_chatters(self):
+        tg = DropToggle(lam=0.5, on_level=2.0, use_schmitt=False)
+        states = [tg.observe(m) for m in (3, 3, 1, 3, 1, 3, 1, 3)]
+        transitions = sum(1 for a, b in zip([False] + states, states)
+                          if a != b)
+        assert transitions > 2   # naive threshold flips on every dip
+
+    def test_disengages_only_at_off_level(self):
+        tg = DropToggle(lam=0.5, on_level=2.0)
+        tg.observe(10)                       # d = 5.0 -> engaged
+        assert tg.engaged
+        while tg.d > tg.off_level:
+            tg.observe(0)
+            if tg.d > tg.off_level:
+                assert tg.engaged            # still above: must hold
+        assert not tg.engaged                # crossed off_level: released
+
+    def test_ewma_matches_eq_5_11(self):
+        tg = DropToggle(lam=0.3, on_level=100.0)
+        d = 0.0
+        for m in (4, 0, 7, 2, 0, 0, 9):
+            tg.observe(m)
+            d = m * 0.3 + d * 0.7
+            assert tg.d == pytest.approx(d)
+        assert len(tg.history) == 7
+        assert tg.history[-1] == pytest.approx(d)
+
+
+class TestAdaptiveAlpha:
+    @pytest.mark.parametrize("osl,alpha", [
+        (0.0, 2.0),          # no oversubscription: conservative 2-sigma
+        (0.25, 1.0),
+        (0.5, 0.0),
+        (1.0, -2.0),         # fully oversubscribed: aggressive
+    ])
+    def test_linear_map(self, osl, alpha):
+        assert adaptive_alpha(osl) == pytest.approx(alpha)
+
+    @pytest.mark.parametrize("osl", [1.5, 4.0, 100.0, 1e9])
+    def test_clamped_at_extreme_oversubscription(self, osl):
+        assert adaptive_alpha(osl) == -2.0
+
+    @pytest.mark.parametrize("osl", [-0.1, -5.0])
+    def test_clamped_below(self, osl):
+        assert adaptive_alpha(osl) == 2.0
+
+
+class TestOversubscriptionLevel:
+    def exec_time(self, mu, sd=0.0):
+        return lambda task, machine: (mu, sd)
+
+    def test_empty_queues_zero(self):
+        m = Machine(mid=0)
+        assert oversubscription_level([m], self.exec_time(10.0), 0.0) == 0.0
+
+    def test_on_time_tasks_contribute_zero(self):
+        m = Machine(mid=0)
+        m.queue = [_task(100.0), _task(120.0)]
+        assert oversubscription_level([m], self.exec_time(10.0), 0.0) == 0.0
+
+    def test_infeasible_tasks_contribute_zero(self):
+        # W = deadline - arrival - e < 0: the request was never servable,
+        # so it cannot count as oversubscription pressure
+        m = Machine(mid=0)
+        m.queue = [_task(5.0)]
+        assert oversubscription_level([m], self.exec_time(10.0), 0.0) == 0.0
+
+    def test_severity_capped_at_four(self):
+        # e=10, deadline=11 -> W=1; completion ~10k -> ratio huge, capped
+        m = Machine(mid=0)
+        m.queue = [_task(11.0, arrival=0.0)]
+        m.running = _task(1e6)
+        m.run_end = 1e4
+        osl = oversubscription_level([m], self.exec_time(10.0), 0.0)
+        assert osl == pytest.approx(4.0)
+        assert adaptive_alpha(osl) == -2.0
+
+    def test_alpha_widens_estimates(self):
+        # alpha enters e = mu + alpha*sigma: a fat-sigma estimate can turn
+        # an on-time queue oversubscribed
+        m = Machine(mid=0)
+        m.queue = [_task(30.0), _task(32.0)]
+        assert oversubscription_level(
+            [m], self.exec_time(10.0, sd=1.0), 0.0, alpha=2.0) == 0.0
+        osl = oversubscription_level(
+            [m], self.exec_time(14.0, sd=4.0), 0.0, alpha=2.0)
+        assert osl > 0.0

@@ -25,8 +25,7 @@ _CFG, _PARAMS = _model()
 
 def _engine(**kw):
     kw.setdefault("n_units", 1)
-    kw.setdefault("max_units", 1)
-    kw.setdefault("elastic", False)
+    kw.setdefault("elasticity", None)
     kw.setdefault("merging", "none")
     kw.setdefault("pruning", None)
     kw.setdefault("result_cache", False)
@@ -218,7 +217,7 @@ class TestPrefixCache:
             n_layers=2, d_model=64, n_heads=2, remat=False)
         params = T.init_params(cfg, KEY)
         eng = ServingEngine(cfg, params, EngineConfig(
-            n_units=1, max_units=1, elastic=False, merging="none",
+            n_units=1, elasticity=None, merging="none",
             pruning=None, result_cache=False, max_len=48,
             batch_buckets=(1,), prefix_cache=True))
         assert eng.kvcache is None

@@ -14,6 +14,7 @@ from repro.data.pipeline import DataConfig, DataPipeline
 from repro.models import transformer as T
 from repro.optim.optimizers import (OptConfig, global_norm, lr_schedule,
                                     opt_init, opt_update)
+from repro.serving.autoscale import ElasticityConfig
 from repro.serving.engine import EngineConfig, Request, ServingEngine
 from repro.train.trainer import TrainConfig, Trainer
 
@@ -211,8 +212,10 @@ def _engine(merging="adaptive", pruning=True, **kw):
         n_layers=1, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128, vocab=128,
         head_dim=32, remat=False)
     params = T.init_params(cfg, KEY)
+    kw.setdefault("elasticity",
+                  ElasticityConfig(max_extra=1, cooldown=100.0))
     ecfg = EngineConfig(
-        n_units=1, max_units=2, merging=merging,
+        n_units=1, merging=merging,
         pruning=PruningConfig(initial_defer_threshold=0.1,
                               base_drop_threshold=0.05) if pruning else None,
         max_len=48, batch_buckets=(1, 2, 4), **kw)
@@ -284,7 +287,9 @@ class TestServingEngine:
 
     def test_elasticity_scales_up(self):
         cfg, eng = _engine(merging="none", pruning=False,
-                           scale_up_queue=3)
+                           elasticity=ElasticityConfig(
+                               max_extra=1, scale_up_queue=3,
+                               cooldown=100.0))
         trace = [(0.0, Request(prompt=(i, i + 1, 3), n_new=2, deadline=1e9))
                  for i in range(12)]
         eng.run(trace)
