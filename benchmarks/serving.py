@@ -26,6 +26,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import ARCHS
+from repro.core.fleet import FleetSpec
 from repro.core.pruning import PruningConfig
 from repro.core.simulation import PETOracle, SimConfig, Simulator
 from repro.core.tasks import Machine, PETMatrix, Task
@@ -381,6 +382,124 @@ def autoscale_policies(csv: Csv, checks: dict, n_phases: int = 4,
     return rows
 
 
+def _hetero_trace(n=80, rate=0.2, deadline=300.0, seed=5):
+    """Moderate load, slack deadlines: the regime where a cost-aware
+    mapper can drain work onto slow-but-cheap machines without missing."""
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    for _ in range(n):
+        out.append((t, Request(
+            prompt=tuple(rng.integers(1, 1000, size=8).tolist()),
+            op="generate", n_new=2, deadline=t + deadline)))
+        t += float(rng.exponential(1.0 / rate))
+    return out
+
+
+def hetero_fleet(csv: Csv, checks: dict, n_requests: int = 80,
+                 strict: bool = True) -> list[dict]:
+    """Heterogeneous-fleet cost ladder (DESIGN.md §2.8, Fig. 5.19's cost
+    axis): a homogeneous all-fast pool vs a mixed fast-expensive /
+    slow-cheap fleet under the speed-blind EDF baseline vs the cost-aware
+    MCMD mapper, on both substrates — one FleetSpec builds the engine's
+    units and the simulator's machines, so the rows are bitwise-comparable.
+
+    Claims under test: (1) on the *same* mixed fleet, cost-aware mapping
+    buys a lower execution-cost total at equal-or-better on-time
+    completions than speed-blind mapping; (2) with elasticity on, the
+    per-mtype billing integral charges cheap extras at their own rate
+    (extra_pool_cost ~= cheap_rate x extra_machine_seconds), not at the
+    homogeneous machine-seconds rate."""
+    rng = np.random.default_rng(23)
+    # inconsistent=False: one base PET per task type, machine speed is the
+    # only time axis — the clean consistent-heterogeneity setting
+    pet = PETMatrix.generate(["generate"], ["fast", "slow"], rng,
+                             mean_range=(10, 18), inconsistent=False)
+    fleet_mixed = FleetSpec.parse("fast:2:1.0:1.0,slow:2:0.5:0.25")
+    fleet_homo = FleetSpec.parse("fast:4:1.0:1.0")
+
+    rows, by_key = [], {}
+    for label, fleet, heur in (("homogeneous", fleet_homo, "EDF"),
+                               ("hetero-speed-blind", fleet_mixed, "EDF"),
+                               ("hetero-cost-aware", fleet_mixed, "MCMD")):
+        for substrate in ("engine", "simulator"):
+            trace = _hetero_trace(n=n_requests)
+            if substrate == "engine":
+                sub = ServingEngine(None, None, EngineConfig(
+                    fleet=fleet, heuristic=heur, merging="none",
+                    elasticity=None, result_cache=False,
+                    prefix_cache=False), stub_oracle=PETOracle(pet, seed=7))
+                t0 = time.perf_counter()
+                stats = sub.run(trace)
+                wall = time.perf_counter() - t0
+                stats = {k: stats[k] for k in
+                         ("on_time", "missed", "dropped", "cost",
+                          "pool_cost", "machine_seconds")}
+            else:
+                sim = Simulator(_mirror_tasks(trace), fleet,
+                                PETOracle(pet, seed=7),
+                                SimConfig(heuristic=heur, merging="none"))
+                t0 = time.perf_counter()
+                st = sim.run()
+                wall = time.perf_counter() - t0
+                stats = {"on_time": st.on_time, "missed": st.missed,
+                         "dropped": st.dropped, "cost": st.cost,
+                         "pool_cost": st.pool_cost,
+                         "machine_seconds": st.machine_seconds}
+            row = {"fleet": label, "spec": fleet.serialize(),
+                   "heuristic": heur, "substrate": substrate,
+                   "requests": n_requests, **stats, "wall_s": wall}
+            rows.append(row)
+            by_key[(label, substrate)] = row
+            csv.add(f"hetero_{label}_{substrate}",
+                    on_time=row["on_time"], cost=round(row["cost"], 1),
+                    pool_cost=round(row["pool_cost"], 1))
+            checks[f"hetero_accounted_{label}_{substrate}"] = \
+                row["on_time"] + row["missed"] + row["dropped"] == n_requests
+    if strict:
+        for substrate in ("engine", "simulator"):
+            blind = by_key[("hetero-speed-blind", substrate)]
+            aware = by_key[("hetero-cost-aware", substrate)]
+            # the acceptance claim: lower total cost at >= on-time
+            checks[f"hetero_cost_{substrate}"] = aware["cost"] < blind["cost"]
+            checks[f"hetero_qos_{substrate}"] = \
+                aware["on_time"] >= blind["on_time"]
+    # one spec, two substrates: the decision parity the control plane
+    # guarantees shows up as identical cost/QoS numbers per row
+    for label in ("homogeneous", "hetero-speed-blind", "hetero-cost-aware"):
+        eng, sim_ = by_key[(label, "engine")], by_key[(label, "simulator")]
+        checks[f"hetero_parity_{label}"] = \
+            (eng["on_time"], round(eng["cost"], 6)) == \
+            (sim_["on_time"], round(sim_["cost"], 6))
+
+    # -- per-mtype autoscale billing: cheap extras bill at the cheap rate --
+    el = ElasticityConfig(policy="queue", max_extra=3, cooldown=10.0,
+                          scale_up_queue=6, scale_down_queue=1)
+    small = FleetSpec.parse("fast:1:1.0:1.0,slow:1:0.5:0.25")
+    sim = Simulator(
+        _mirror_tasks(_hetero_trace(n=n_requests, rate=0.5, deadline=200.0)),
+        small, PETOracle(pet, seed=7),
+        SimConfig(heuristic="EDF", merging="none", elasticity=el))
+    st = sim.run()
+    row = {"fleet": "hetero-autoscale", "spec": small.serialize(),
+           "heuristic": "EDF", "substrate": "simulator",
+           "requests": n_requests, "on_time": st.on_time,
+           "missed": st.missed, "dropped": st.dropped, "cost": st.cost,
+           "pool_cost": st.pool_cost, "machine_seconds": st.machine_seconds,
+           "extra_machine_seconds": st.extra_machine_seconds,
+           "extra_pool_cost": st.extra_pool_cost, "scale_ups": st.scale_ups,
+           "wall_s": 0.0}
+    rows.append(row)
+    csv.add("hetero_autoscale_billing", scale_ups=st.scale_ups,
+            extra_ms=round(st.extra_machine_seconds, 1),
+            extra_pool_cost=round(st.extra_pool_cost, 1))
+    checks["hetero_billing_scales"] = st.scale_ups > 0
+    # extras are the cheapest row (0.25/tick): per-mtype billing must charge
+    # well under the homogeneous machine-seconds rate (1.0/tick)
+    checks["hetero_billing_per_mtype"] = \
+        st.extra_pool_cost <= 0.2501 * st.extra_machine_seconds + 1e-6
+    return rows
+
+
 def run(csv: Csv, n_requests: int = 60) -> dict:
     checks = {}
     cfg, params = _model()
@@ -438,31 +557,39 @@ def run(csv: Csv, n_requests: int = 60) -> dict:
     router_rows = router_scaling(max(n_requests, 40), csv, checks)
     # --- autoscale policy ladder (queue vs success-chance vs cost-aware) ---
     autoscale_rows = autoscale_policies(csv, checks)
+    # --- heterogeneous fleet: cost-aware mapping + per-mtype billing -------
+    hetero_rows = hetero_fleet(csv, checks)
     with open(OUT_PATH, "w") as f:
         json.dump({"bench": "serving_control_plane", "rows": rows,
                    "router_rows": router_rows,
-                   "autoscale_rows": autoscale_rows}, f, indent=1)
+                   "autoscale_rows": autoscale_rows,
+                   "hetero_rows": hetero_rows}, f, indent=1)
     return checks
 
 
 if __name__ == "__main__":
-    # CI smoke entry: the autoscale section alone, tiny trace, loose checks
-    # (exercises the SCALER_POLICIES registry, both substrates and the
-    # Pallas-interpret pmf_conv signal path without the model benchmarks)
+    # CI smoke entry: the autoscale + heterogeneous-fleet sections alone,
+    # tiny traces, loose checks (exercises the SCALER_POLICIES registry,
+    # both substrates, the Pallas-interpret pmf_conv signal path, the
+    # FleetSpec plumbing and the cost-aware heuristics without the model
+    # benchmarks)
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="autoscale section only, 1 phase, registry/path "
-                         "checks (no QoS-vs-cost assertions)")
+                    help="autoscale + hetero-fleet sections only, tiny "
+                         "traces, registry/path/parity checks (no "
+                         "QoS-vs-cost assertions)")
     args = ap.parse_args()
-    csv = Csv("autoscale (smoke)" if args.smoke else "serving")
+    csv = Csv("autoscale+hetero (smoke)" if args.smoke else "serving")
     checks: dict = {}
     if args.smoke:
         autoscale_rows = autoscale_policies(csv, checks, n_phases=1,
                                             strict=False)
+        hetero_rows = hetero_fleet(csv, checks, n_requests=32, strict=False)
         payload = {"bench": "serving_autoscale_smoke",
-                   "autoscale_rows": autoscale_rows}
+                   "autoscale_rows": autoscale_rows,
+                   "hetero_rows": hetero_rows}
         # own artifact: never clobber the full run's BENCH_serving.json
         smoke_path = OUT_PATH.replace("BENCH_serving",
                                       "BENCH_autoscale_smoke")

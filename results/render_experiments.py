@@ -161,6 +161,29 @@ def autoscale_table(path="../BENCH_serving.json"):
     return "\n".join(out)
 
 
+def hetero_fleet_table(path="../BENCH_serving.json"):
+    """Heterogeneous-fleet cost ladder: homogeneous vs mixed fleet,
+    speed-blind vs cost-aware mapping, per-mtype autoscale billing
+    (DESIGN.md §2.8; benchmarks/serving.py::hetero_fleet)."""
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return "(run `python -m benchmarks.run --only serving` first)"
+    rows = json.load(open(p)).get("hetero_rows", [])
+    if not rows:
+        return "(re-run `python -m benchmarks.run --only serving`: " \
+               "no hetero_rows in BENCH_serving.json)"
+    out = ["| fleet | spec | heuristic | substrate | requests | on-time | "
+           "exec cost | pool cost | machine-seconds |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['fleet']} | `{r['spec']}` | {r['heuristic']} "
+            f"| {r['substrate']} | {r['requests']} | {r['on_time']} "
+            f"| {r['cost']:.0f} | {r['pool_cost']:.0f} "
+            f"| {r['machine_seconds']:.0f} |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     cur = load("dryrun.jsonl")
     base = load("dryrun_baseline.jsonl")
@@ -183,3 +206,6 @@ if __name__ == "__main__":
     print("\n## §Autoscale — cost/QoS elasticity policies "
           "(queue vs success-chance vs cost-aware)\n")
     print(autoscale_table())
+    print("\n## §Heterogeneous fleet — cost-aware mapping + per-mtype "
+          "billing (homogeneous vs mixed)\n")
+    print(hetero_fleet_table())

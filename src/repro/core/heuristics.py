@@ -1,6 +1,7 @@
 """Task-machine mapping heuristics (dissertation Sections 2.5, 5.4.2).
 
 Immediate-mode (on arrival):  RR, MET, MCT, KPB
+Cost-aware (Fig. 5.19 axis):  MEC, MCMD
 Batch-mode (two-phase):       MM, MSD, MMU, MOC
 Homogeneous:                  FCFS-RR, EDF, SJF, MU
 Pruning-aware:                PAM, PAMF
@@ -68,6 +69,13 @@ class MappingContext:
 
     def expected_completion(self, task: Task, machine: Machine) -> float:
         return self.avail(machine) + self.exec_mean(task, machine)
+
+    def exec_cost(self, task: Task, machine: Machine) -> float:
+        """Cost-normalized PET score (Fig. 5.19's cost axis): expected
+        occupancy time on ``machine`` priced at its per-time cost rate.
+        A slow-but-cheap machine wins whenever rate drops faster than
+        speed — exactly the trade the cost-aware heuristics arbitrate."""
+        return self.exec_mean(task, machine) * machine.cost_rate
 
     def prefix_overlap(self, task: Task, machine: Machine) -> int:
         """KV-locality term: prompt tokens of ``task`` already held in a
@@ -173,6 +181,33 @@ class MCT(_ImmediateBest):
 
     def score(self, task, machine, ctx):
         return ctx.expected_completion(task, machine)
+
+
+class MEC(_ImmediateBest):
+    """Minimum Execution Cost: cost-normalized PET scoring — run each task
+    where (expected execution time x machine cost rate) is lowest,
+    regardless of queue depth (the cost analogue of MET)."""
+    name = "MEC"
+
+    def score(self, task, machine, ctx):
+        return ctx.exec_cost(task, machine)
+
+
+class MCMD(_ImmediateBest):
+    """Min-Cost-Meeting-Deadline: among machines whose expected completion
+    meets the task's effective deadline, the cheapest execution wins
+    (earliest completion breaks cost ties); when no free machine can meet
+    the deadline any more, fall back to earliest completion so QoS degrades
+    before the budget does.  On a heterogeneous fleet this drains slack
+    work onto slow-but-cheap machines and reserves the fast expensive ones
+    for urgent tasks — Fig. 5.19's cost-vs-QoS knob as a mapping policy."""
+    name = "MCMD"
+
+    def score(self, task, machine, ctx):
+        completion = ctx.expected_completion(task, machine)
+        if completion <= task.effective_deadline:
+            return (0, ctx.exec_cost(task, machine), completion)
+        return (1, completion, 0.0)
 
 
 class KPB(_ImmediateBest):
@@ -434,7 +469,7 @@ class PAMF(PAM):
 
 
 HEURISTICS = {h.name: h for h in
-              [RoundRobin, MET, MCT, KPB, MinMin, MSD, MMU, MOC,
+              [RoundRobin, MET, MCT, KPB, MEC, MCMD, MinMin, MSD, MMU, MOC,
                FCFSRR, EDF, SJF, MU, PAM, PAMF]}
 
 

@@ -19,6 +19,7 @@ from typing import TYPE_CHECKING
 import numpy as np
 
 from .controlplane import ControlConfig, ControlPlane, Substrate
+from .fleet import FleetSpec
 from .merge_model import VideoExecModel, VideoMeta
 from .pmf import PMF
 from .pruning import PruningConfig
@@ -134,6 +135,13 @@ class SimConfig:
     prefix_cache_blocks: int = 0
     kv_block_size: int = 16
     prefill_fraction: float = 0.6       # share of exec time that is prefill
+    # per-machine KV caches (DESIGN.md §2.8): each machine owns its own
+    # ``prefix_cache_blocks``-block cache — the analytical twin of the live
+    # engine's per-unit caches, where ``MappingContext.prefix_overlap``
+    # discriminates within the pool.  False keeps the pre-fleet shared
+    # cache (one pool-wide cache; the machine argument is a no-op), which
+    # models a disaggregated KV store and preserves legacy sweeps exactly.
+    kv_per_machine: bool = False
 
     def control(self) -> ControlConfig:
         return ControlConfig(
@@ -165,6 +173,8 @@ class SimStats:
     scale_decisions: int = 0
     machine_seconds: float = 0.0        # integral of pool size over time
     extra_machine_seconds: float = 0.0  # spend above the base pool
+    pool_cost: float = 0.0              # per-mtype cost_rate integral
+    extra_pool_cost: float = 0.0        # cost integral above the base pool
     warmup_ticks: float = 0.0           # virtual time charged to warm-ups
     per_type: dict = field(default_factory=dict)
     per_user_missrate: dict = field(default_factory=dict)
@@ -205,32 +215,48 @@ class SimStats:
 # ---------------------------------------------------------------------------
 
 class Simulator(Substrate):
-    def __init__(self, tasks: list[Task], machines: list[Machine], oracle,
+    def __init__(self, tasks: list[Task], machines, oracle,
                  cfg: SimConfig | None = None):
         self.cfg = cfg or SimConfig()
         self.tasks = sorted(tasks, key=lambda t: t.arrival)
-        self.machines = machines
+        # ``machines`` may be a FleetSpec (DESIGN.md §2.8): the simulator
+        # then builds the exact machines a serving engine on the same spec
+        # would run (mids from 1, same mtypes/speeds/cost rates/queues), so
+        # trace-equivalence tests share PET keys by construction
+        self.fleet = machines if isinstance(machines, FleetSpec) else None
+        self.machines = (machines.build_machines()
+                         if isinstance(machines, FleetSpec) else machines)
         self.oracle = oracle
         self.stats = SimStats()
         self.cp = ControlPlane(self, self.cfg.control())
         self._rng = np.random.default_rng(self.cfg.seed)
         self._result_cache: set = set()
-        self._base_pool = len(machines)
-        self._extra_mid = max((m.mid for m in machines), default=-1)
+        self._base_pool = len(self.machines)
+        self._extra_mid = max((m.mid for m in self.machines), default=-1)
         self.scaler = None
         if self.cfg.elasticity is not None and self.cfg.elasticity.max_extra > 0:
             # lazy import: core stays importable without the serving package
             from ..serving.autoscale import PoolScaler
             self.scaler = PoolScaler(self.cfg.elasticity,
-                                     _SimMachinePool(self), len(machines))
+                                     _SimMachinePool(self),
+                                     len(self.machines))
         self.kvcache = None
+        self.kvcaches: dict[int, object] = {}   # mid -> per-machine cache
+        self._retired_evictions = 0             # from scaler-retired caches
         if self.cfg.prefix_cache_blocks > 0:
             # lazy import: core stays importable without the serving package
-            from ..serving.kvcache import PrefixKVCache
-            self.kvcache = PrefixKVCache(self.cfg.prefix_cache_blocks,
-                                         self.cfg.kv_block_size,
-                                         clock_fn=lambda: self.now)
-            self.cp.detector.prefix_index = self.kvcache.index
+            from ..serving.kvcache import CombinedPrefixIndex, PrefixKVCache
+            if self.cfg.kv_per_machine:
+                # the live engine's per-unit caches, analytically: each
+                # machine admits/evicts its own blocks and the locality
+                # term discriminates within the pool
+                for m in self.machines:
+                    self.kvcaches[m.mid] = self._make_kvcache()
+                self.cp.detector.prefix_index = \
+                    CombinedPrefixIndex(self.kvcaches)
+            else:
+                self.kvcache = self._make_kvcache()
+                self.cp.detector.prefix_index = self.kvcache.index
             # prefix-cache-aware mapping, same wiring as the live engine
             self.cp.prefix_fn = self._prefix_locality
 
@@ -255,8 +281,29 @@ class Simulator(Substrate):
     def heuristic(self):
         return self.cp.heuristic
 
+    def _make_kvcache(self):
+        from ..serving.kvcache import PrefixKVCache
+        return PrefixKVCache(self.cfg.prefix_cache_blocks,
+                             self.cfg.kv_block_size,
+                             clock_fn=lambda: self.now)
+
+    def _machine_cache(self, machine: Machine):
+        """The cache an execution on ``machine`` reads/writes: its own in
+        per-machine mode, the shared one otherwise."""
+        if self.cfg.kv_per_machine:
+            return self.kvcaches.get(machine.mid)
+        return self.kvcache
+
     def _prefix_locality(self, task: Task, machine: Machine) -> int:
-        return self.detector.find_prefix_overlap(task.tokens)
+        if not self.cfg.kv_per_machine:
+            # shared cache: every machine scores the same overlap (the
+            # pre-fleet behavior — locality only discriminates across
+            # planes, through the router)
+            return self.detector.find_prefix_overlap(task.tokens)
+        cache = self.kvcaches.get(machine.mid)
+        if cache is None or task.tokens is None or len(task.tokens) < 2:
+            return 0
+        return cache.index.match_len(task.tokens, len(task.tokens) - 1)
 
     def run(self) -> SimStats:
         """Closed-trace convenience: schedule every constructor task, drain,
@@ -286,10 +333,15 @@ class Simulator(Substrate):
             s.scale_decisions = sc["scale_decisions"]
             s.machine_seconds = sc["machine_seconds"]
             s.extra_machine_seconds = sc["extra_machine_seconds"]
+            s.pool_cost = sc["pool_cost"]
+            s.extra_pool_cost = sc["extra_pool_cost"]
             s.warmup_ticks = sc["warmup_ticks"]
         else:
-            # fixed pool: the integral degenerates to pool x makespan
+            # fixed pool: the integrals degenerate to pool x makespan,
+            # billed per machine type through each machine's cost rate
             s.machine_seconds = len(self.machines) * s.makespan
+            s.pool_cost = s.makespan * sum(m.cost_rate
+                                           for m in self.machines)
         return s
 
     # -- Substrate: admission -------------------------------------------------
@@ -315,14 +367,14 @@ class Simulator(Substrate):
     # -- Substrate: execution -------------------------------------------------
     def begin_execution(self, task: Task, m: Machine, now: float) -> float:
         dur = self.oracle.sample(task, m)
-        dur = self._apply_prefix_reuse(task, dur)
+        dur = self._apply_prefix_reuse(task, dur, m)
         self.stats.busy_time += dur
         self.stats.cost += dur * m.cost_rate
         self.stats.energy += dur * m.power
         return dur
 
     def finish_execution(self, task: Task, m: Machine, now: float) -> int:
-        self._finish_prefix_reuse(task)
+        self._finish_prefix_reuse(task, m)
         missed = 0
         for r in task.all_requests():
             r.status = "done"
@@ -355,16 +407,20 @@ class Simulator(Substrate):
             u[0] += 1
 
     # -- analytical paged-KV prefix reuse (DESIGN.md §2.4) ---------------------
-    def _apply_prefix_reuse(self, task: Task, dur: float) -> float:
-        """Shrink ``dur`` by the prefill share covered by cached KV blocks.
+    def _apply_prefix_reuse(self, task: Task, dur: float,
+                            m: Machine) -> float:
+        """Shrink ``dur`` by the prefill share covered by cached KV blocks
+        (in per-machine mode, only the executing machine's own blocks —
+        the live engine's per-unit semantics).
 
         Mirrors the live engine's lookup-pin-execute protocol: the matched
         blocks stay pinned until the task finishes, so concurrent evictions
         (other machines inserting) can never free KV this execution reads."""
-        if self.kvcache is None or not task.tokens:
+        cache = self._machine_cache(m)
+        if cache is None or not task.tokens:
             return dur
         toks = task.tokens
-        hit = self.kvcache.lookup(toks, max_tokens=len(toks) - 1)
+        hit = cache.lookup(toks, max_tokens=len(toks) - 1)
         task._prefix_hit = hit
         if not hit:
             return dur
@@ -374,20 +430,27 @@ class Simulator(Substrate):
         self.stats.prefix_time_saved += saved
         return dur - saved
 
-    def _finish_prefix_reuse(self, task: Task) -> None:
-        if self.kvcache is None or not task.tokens:
+    def _finish_prefix_reuse(self, task: Task, m: Machine) -> None:
+        cache = self._machine_cache(m)
+        if cache is None or not task.tokens:
             return
-        self.kvcache.insert(task.tokens)
+        cache.insert(task.tokens)
         hit = getattr(task, "_prefix_hit", None)
         if hit:
-            self.kvcache.release(hit)
-        self.stats.prefix_evictions = self.kvcache.stats["evictions"]
+            cache.release(hit)
+        caches = (self.kvcaches.values() if self.cfg.kv_per_machine
+                  else (self.kvcache,))
+        self.stats.prefix_evictions = self._retired_evictions + \
+            sum(c.stats["evictions"] for c in caches)
 
 
 class _SimMachinePool:
-    """Autoscale pool adapter over the simulator's machine list: grows by
-    cloning ``machines[0]`` (payload-free, instant — no warm-up charge) and
-    retires only scaler-added extras, last idle one first."""
+    """Autoscale pool adapter over the simulator's machine list: grows
+    instantly (payload-free, no warm-up charge) — from the fleet's
+    cheapest row when the simulator was built from a :class:`FleetSpec`,
+    else by cloning ``machines[0]`` (the pre-fleet behavior) — and retires
+    only scaler-added extras, priciest idle one first (the last idle extra
+    on a homogeneous pool, exactly the legacy scan)."""
 
     def __init__(self, sim: Simulator):
         self.sim = sim
@@ -395,20 +458,35 @@ class _SimMachinePool:
     def size(self) -> int:
         return len(self.sim.machines)
 
+    def cost_rate(self) -> float:
+        return sum(m.cost_rate for m in self.sim.machines)
+
     def grow(self, now: float) -> float:
-        proto = self.sim.machines[0]
-        self.sim._extra_mid += 1
-        self.sim.machines.append(Machine(
-            mid=self.sim._extra_mid, mtype=proto.mtype, speed=proto.speed,
-            queue_size=proto.queue_size, cost_rate=proto.cost_rate,
-            power=proto.power))
+        sim = self.sim
+        sim._extra_mid += 1
+        if sim.fleet is not None:
+            m = sim.fleet.cheapest().build_machine(sim._extra_mid)
+        else:
+            proto = sim.machines[0]
+            m = Machine(mid=sim._extra_mid, mtype=proto.mtype,
+                        speed=proto.speed, queue_size=proto.queue_size,
+                        cost_rate=proto.cost_rate, power=proto.power)
+        sim.machines.append(m)
+        if sim.cfg.kv_per_machine and sim.cfg.prefix_cache_blocks > 0:
+            sim.kvcaches[m.mid] = sim._make_kvcache()
         return 0.0
 
     def shrink(self, now: float) -> bool:
-        machines = self.sim.machines
-        for i in range(len(machines) - 1, self.sim._base_pool - 1, -1):
-            m = machines[i]
-            if m.running is None and not m.queue and m.busy_until <= now:
-                machines.pop(i)
-                return True
-        return False
+        sim = self.sim
+        machines = sim.machines
+        idle = [i for i in range(sim._base_pool, len(machines))
+                if machines[i].running is None and not machines[i].queue
+                and machines[i].busy_until <= now]
+        if not idle:
+            return False
+        i = max(idle, key=lambda j: (machines[j].cost_rate, j))
+        m = machines.pop(i)
+        cache = sim.kvcaches.pop(m.mid, None)
+        if cache is not None:
+            sim._retired_evictions += cache.stats["evictions"]
+        return True

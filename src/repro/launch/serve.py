@@ -16,6 +16,13 @@ unit pool (``--max-extra-units`` headroom) and — with ``--extra-planes N``
 compiled executables).  The autoscale decision counters (scale_ups,
 scale_downs, machine_seconds, warmup_ticks, plane_scale_*) ride in the
 JSON summary.
+
+``--fleet tpu:4:1.0:1.0,cpu:4:0.25:0.2`` builds every engine on a
+heterogeneous machine catalog (DESIGN.md §2.8: mtype, count, speed,
+per-machine cost rate, optional backend kind and queue size) instead of
+``--units`` identical units; cost-aware mapping (``--heuristic MCMD``)
+and the per-mtype-billed cost counters (cost, pool_cost) ride in the
+JSON summary.
 """
 
 from __future__ import annotations
@@ -27,6 +34,7 @@ import jax
 import numpy as np
 
 from ..configs.registry import get_arch
+from ..core.fleet import FleetSpec
 from ..core.pruning import PruningConfig
 from ..models import transformer as T
 from ..serving.autoscale import SCALER_POLICIES, ElasticityConfig
@@ -55,6 +63,12 @@ def main():
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--requests", type=int, default=100)
     ap.add_argument("--units", type=int, default=2)
+    ap.add_argument("--fleet", default=None,
+                    help="heterogeneous fleet catalog per engine, "
+                         "mtype:count[:speed[:cost_rate[:backend"
+                         "[:queue_size]]]] rows comma-separated "
+                         "(e.g. tpu:4:1.0:1.0,cpu:4:0.25:0.2); "
+                         "overrides --units")
     ap.add_argument("--heuristic", default="EDF")
     ap.add_argument("--merging", default="adaptive",
                     choices=["none", "conservative", "aggressive", "adaptive"])
@@ -78,8 +92,10 @@ def main():
 
     cfg = get_arch(args.arch).reduced().scaled(n_layers=2, remat=False)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    fleet = FleetSpec.parse(args.fleet) if args.fleet else None
     ecfg = EngineConfig(
-        n_units=args.units, heuristic=args.heuristic, merging=args.merging,
+        n_units=args.units, fleet=fleet,
+        heuristic=args.heuristic, merging=args.merging,
         pruning=PruningConfig(initial_defer_threshold=0.15,
                               base_drop_threshold=0.1)
         if args.pruning else None,
@@ -100,6 +116,8 @@ def main():
     trace = synth_trace(args.requests, cfg.vocab, rate=args.rate,
                         deadline=args.deadline)
     stats = router.run(trace)
+    if fleet is not None:
+        stats["fleet"] = fleet.serialize()
     print(json.dumps(stats, indent=2))
 
 

@@ -40,9 +40,21 @@ class ElasticityConfig:
     signal_tasks: int = 32         # cap on batch tasks scored per decision
     signal_grid: int = 64          # PMF grid length for the batched kernel
     use_kernel: bool = True        # pmf_conv Pallas kernel (interpret mode)
+    # -- pressure-signal selection -------------------------------------------
+    # what the probabilistic policies react to: "chance" (the Ch. 5
+    # batched chance-of-success) or "osl" (Eq. 4.3 oversubscription level
+    # over the machine queues — deadline-miss *severity*, no convolution)
+    pressure_signal: str = "chance"
+    osl_up: float = 0.25           # scale up when OSL >= this
+    osl_down: float = 0.05         # scale down when <= this (queue drained)
     # -- cost model (policy "cost-aware") ------------------------------------
     # budget of *extra* machine-seconds (above the base pool) the scaler may
     # spend over the run; once burned, scale-ups stop and extras drain
     budget_machine_seconds: float = float("inf")
-    pressure_lam: float = 0.3      # EWMA weight of the at-risk counter
-    pressure_on: float = 2.0       # Schmitt-trigger engage level (Eq. 5.11)
+    # budget of extra *cost* (per-mtype cost_rate integral above the base
+    # pool, Fig. 5.19) — on a heterogeneous fleet a cheap extra unit burns
+    # this slower than an expensive one
+    budget_cost: float = float("inf")
+    pressure_lam: float = 0.3      # EWMA weight of the pressure counter
+    pressure_on: float = 2.0       # Schmitt-trigger engage level (Eq. 5.11);
+    #                                tune down (~osl_up) with "osl" pressure

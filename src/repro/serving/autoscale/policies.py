@@ -55,12 +55,25 @@ class QueueScaler(ScalerPolicy):
 
 
 class SuccessChanceScaler(ScalerPolicy):
-    """Scale on degrading batch success chance, not on queue depth."""
+    """Scale on degrading batch success chance, not on queue depth.
+
+    ``pressure_signal="osl"`` (ElasticityConfig) swaps the Ch. 5 chance
+    convolution for the Eq. 4.3 oversubscription level over the machine
+    queues: deadline-miss *severity* as the pressure — no PMF math on the
+    decision path, reacting to work already mapped rather than queued."""
     name = "success-chance"
 
     def decide(self, sig: ScaleSignals) -> int:
         if sig.qlen == 0:
             return -1                       # idle: drain extras
+        if self.cfg.pressure_signal == "osl":
+            o = sig.osl()
+            if o >= self.cfg.osl_up:
+                return 1
+            if o <= self.cfg.osl_down and \
+                    sig.qlen <= self.cfg.scale_down_queue:
+                return -1
+            return 0
         p = sig.chance()
         if p <= self.cfg.low_chance:
             return 1
@@ -72,12 +85,15 @@ class SuccessChanceScaler(ScalerPolicy):
 class CostAwareScaler(ScalerPolicy):
     """Success-chance pressure through a Schmitt trigger, on a budget.
 
-    The at-risk counter (queued tasks whose chance <= ``low_chance``) is
+    The at-risk counter (queued tasks whose chance <= ``low_chance``; with
+    ``pressure_signal="osl"``, the Eq. 4.3 severity itself) is
     EWMA-smoothed exactly like the pruner's miss counter (Eq. 5.11); the
     20%-separation Schmitt trigger keeps a noisy boundary workload from
     flapping units up and down.  ``budget_machine_seconds`` bounds the
-    *extra* (above-base) machine-seconds this scaler may ever spend: over
-    budget, scale-ups stop and the extras drain as they fall idle.
+    *extra* (above-base) machine-seconds this scaler may ever spend, and
+    ``budget_cost`` bounds the per-mtype-billed extra cost (Fig. 5.19 —
+    cheap extras burn it slower): over either budget, scale-ups stop and
+    the extras drain as they fall idle.
     """
     name = "cost-aware"
     stateful = True
@@ -88,9 +104,12 @@ class CostAwareScaler(ScalerPolicy):
                                  on_level=cfg.pressure_on, use_schmitt=True)
 
     def decide(self, sig: ScaleSignals) -> int:
-        engaged = self.toggle.observe(sig.at_risk(self.cfg.low_chance))
+        pressure = (sig.osl() if self.cfg.pressure_signal == "osl"
+                    else sig.at_risk(self.cfg.low_chance))
+        engaged = self.toggle.observe(pressure)
         over_budget = (sig.extra_machine_seconds
-                       >= self.cfg.budget_machine_seconds)
+                       >= self.cfg.budget_machine_seconds
+                       or sig.extra_cost >= self.cfg.budget_cost)
         if over_budget:
             return -1
         if engaged:

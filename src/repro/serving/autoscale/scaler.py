@@ -36,6 +36,10 @@ class MachinePool(Protocol):
         """Retire one idle unit (never lose queued work); False when no
         unit is currently retirable."""
 
+    # optional: summed per-machine cost rate of the live pool.  Pools that
+    # omit it are billed homogeneously (rate == size, the pre-fleet model).
+    # def cost_rate(self) -> float: ...
+
 
 class PoolScaler:
     def __init__(self, cfg: ElasticityConfig, pool: MachinePool,
@@ -46,24 +50,44 @@ class PoolScaler:
         self.policy = make_scaler_policy(cfg.policy, cfg)
         self.stats = {"scale_ups": 0, "scale_downs": 0,
                       "scale_decisions": 0, "machine_seconds": 0.0,
-                      "extra_machine_seconds": 0.0, "warmup_ticks": 0.0}
+                      "extra_machine_seconds": 0.0, "pool_cost": 0.0,
+                      "extra_pool_cost": 0.0, "warmup_ticks": 0.0}
         self._last = 0.0
         self._cooldown_until = 0.0
+        #: the base pool's summed cost rate, captured before any scaling:
+        #: spend above it is what the cost budgets gate
+        self._base_rate = self._pool_rate()
+
+    def _pool_rate(self) -> float:
+        fn = getattr(self.pool, "cost_rate", None)
+        return float(fn()) if fn is not None else float(self.pool.size())
 
     # -- cost accounting ------------------------------------------------------
     def sync(self, now: float) -> None:
-        """Advance the machine-seconds integral to ``now`` (idempotent)."""
+        """Advance the machine-seconds and cost integrals to ``now``
+        (idempotent).  Cost is billed per machine type: the pool reports
+        its summed ``cost_rate`` (Fig. 5.19's per-machine rate), so a
+        cheap extra unit burns budget slower than an expensive one — the
+        pre-fleet model (rate == unit count) is the homogeneous special
+        case."""
         dt = now - self._last
         if dt <= 0.0:
             return
         n = self.pool.size()
+        rate = self._pool_rate()
         self.stats["machine_seconds"] += n * dt
         self.stats["extra_machine_seconds"] += max(n - self.base, 0) * dt
+        self.stats["pool_cost"] += rate * dt
+        self.stats["extra_pool_cost"] += max(rate - self._base_rate, 0.0) * dt
         self._last = now
 
     @property
     def extra_machine_seconds(self) -> float:
         return self.stats["extra_machine_seconds"]
+
+    @property
+    def extra_pool_cost(self) -> float:
+        return self.stats["extra_pool_cost"]
 
     # -- the decision step ----------------------------------------------------
     def step(self, now: float, sig: ScaleSignals) -> int:
@@ -71,9 +95,10 @@ class PoolScaler:
         (-1 retired a unit, 0 held, +1 added one)."""
         self.sync(now)
         # the signal snapshot may have been built before the sync: refresh
-        # the spend so the cost-aware budget gate sees the integral *as of
+        # the spend so the cost-aware budget gates see the integrals *as of
         # now*, not as of the previous decision
         sig.extra_machine_seconds = self.extra_machine_seconds
+        sig.extra_cost = self.extra_pool_cost
         # a stateful policy's EWMA (cost-aware) observes every decision
         # point — it must keep decaying/charging through cooldown windows,
         # which only suppress *actions*; a stateless policy's verdict would

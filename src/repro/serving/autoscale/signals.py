@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ...core.oversubscription import oversubscription_level
 from ...core.pmf import PMF, chance_of_success
 
 __all__ = ["ScaleSignals", "batch_chances"]
@@ -120,8 +121,8 @@ def batch_chances(batch, machines, oracle, now: float, pruner=None, *,
 def substrate_signals(scaler, cp, machines, oracle, now: float):
     """``ScaleSignals`` for a control-plane substrate (engine/simulator):
     queue depth from the shared batch queue, lazy chance array over the
-    substrate's machines and oracle, pruner-backed tails when one is
-    attached."""
+    substrate's machines and oracle, lazy Eq. 4.3 oversubscription level
+    over the machine queues, pruner-backed tails when one is attached."""
     cfg = scaler.cfg
     return ScaleSignals(
         now, len(cp.batch),
@@ -129,30 +130,46 @@ def substrate_signals(scaler, cp, machines, oracle, now: float):
             cp.batch, machines, oracle, now, pruner=cp.pruner,
             signal_tasks=cfg.signal_tasks, grid=cfg.signal_grid,
             use_kernel=cfg.use_kernel),
-        extra_machine_seconds=scaler.extra_machine_seconds)
+        osl_fn=lambda: oversubscription_level(machines, oracle.mean_std,
+                                              now),
+        extra_machine_seconds=scaler.extra_machine_seconds,
+        extra_cost=scaler.extra_pool_cost)
 
 
 class ScaleSignals:
     """What a scaler policy may consult for one decision.
 
-    The chance array is lazy and memoized: the ``queue`` policy never pays
-    a convolution, and the probabilistic policies share one batched kernel
-    launch between ``chance()`` and ``at_risk()``.
+    The chance array and the OSL scalar are lazy and memoized: the
+    ``queue`` policy never pays a convolution, the probabilistic policies
+    share one batched kernel launch between ``chance()`` and ``at_risk()``,
+    and the Eq. 4.3 walk only runs when ``pressure_signal="osl"`` reads it.
     """
 
-    def __init__(self, now: float, qlen: int, chances_fn=None,
-                 extra_machine_seconds: float = 0.0):
+    def __init__(self, now: float, qlen: int, chances_fn=None, osl_fn=None,
+                 extra_machine_seconds: float = 0.0,
+                 extra_cost: float = 0.0):
         self.now = now
         self.qlen = qlen
         self.extra_machine_seconds = extra_machine_seconds
+        self.extra_cost = extra_cost
         self._fn = chances_fn
+        self._osl_fn = osl_fn
         self._chances = None
+        self._osl = None
 
     def chances(self) -> np.ndarray:
         if self._chances is None:
             self._chances = (np.zeros(0) if self._fn is None
                              else np.asarray(self._fn()))
         return self._chances
+
+    def osl(self) -> float:
+        """Eq. 4.3 oversubscription level over the machine queues —
+        deadline-miss severity as the elasticity pressure (0 without a
+        wired-in signal)."""
+        if self._osl is None:
+            self._osl = 0.0 if self._osl_fn is None else float(self._osl_fn())
+        return self._osl
 
     def chance(self) -> float:
         """Aggregate (mean) success chance; 1.0 with an empty queue."""

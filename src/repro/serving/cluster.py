@@ -39,6 +39,7 @@ import itertools
 
 import numpy as np
 
+from ..core.oversubscription import oversubscription_level
 from ..core.simulation import Simulator
 from ..core.tasks import Task
 from .autoscale import (ElasticityConfig, PoolScaler, ScaleSignals,
@@ -390,9 +391,10 @@ class Router:
 
     # -- plane-count autoscaling ----------------------------------------------
     def _plane_signals(self, now: float) -> ScaleSignals:
-        """Cross-plane aggregate for the plane scaler: total queued work and
+        """Cross-plane aggregate for the plane scaler: total queued work,
         the concatenated per-plane success-chance arrays (every plane scored
-        with its own machines, oracle and — when attached — pruner)."""
+        with its own machines, oracle and — when attached — pruner), and
+        the machine-queue-weighted mean of per-plane Eq. 4.3 OSLs."""
         cfg = self.plane_scaler.cfg
 
         def chances():
@@ -405,10 +407,21 @@ class Router:
             arrs = [a for a in arrs if a.size]
             return np.concatenate(arrs) if arrs else np.zeros(0)
 
+        def osl():
+            total, n = 0.0, 0
+            for p in self.planes:
+                queued = sum(len(m.queue) for m in p.sub.machines)
+                if queued:
+                    total += queued * oversubscription_level(
+                        p.sub.machines, p.sub.oracle.mean_std, p.now)
+                    n += queued
+            return total / n if n else 0.0
+
         return ScaleSignals(
             now, sum(len(p.cp.batch) for p in self.planes),
-            chances_fn=chances,
-            extra_machine_seconds=self.plane_scaler.extra_machine_seconds)
+            chances_fn=chances, osl_fn=osl,
+            extra_machine_seconds=self.plane_scaler.extra_machine_seconds,
+            extra_cost=self.plane_scaler.extra_pool_cost)
 
     # -- closed-trace compatibility -------------------------------------------
     def run(self, trace) -> dict:
@@ -461,6 +474,8 @@ class Router:
                 "scale_decisions": sc["scale_decisions"],
                 "plane_seconds": sc["machine_seconds"],
                 "extra_plane_seconds": sc["extra_machine_seconds"],
+                "plane_cost": sc["pool_cost"],
+                "extra_plane_cost": sc["extra_pool_cost"],
             }
         return agg
 
@@ -488,6 +503,23 @@ class _PlanePool:
 
     def size(self) -> int:
         return len(self.router.planes)
+
+    def cost_rate(self) -> float:
+        """Per-mtype billing across the cluster: the summed *base-fleet*
+        cost rate of every live plane (a plane of cheap units is cheaper
+        to keep than a plane of fast ones).  Deliberately not the live
+        machine list: a plane's own unit-level scaler already bills its
+        extra units in that engine's ``extra_pool_cost``, so counting the
+        live pool here would double-bill unit churn against the plane
+        budget (and spuriously gate plane scale-ups)."""
+        total = 0.0
+        for p in self.router.planes:
+            fleet = getattr(p.sub, "fleet", None)
+            if fleet is not None:
+                total += fleet.cost_rate_total()
+            else:
+                total += sum(m.cost_rate for m in p.sub.machines)
+        return total
 
     def grow(self, now: float) -> float:
         r = self.router
@@ -523,7 +555,9 @@ def make_engine_planes(model_cfg, params, cfg, n_planes: int,
     """N ``ServingEngine`` planes.  Live engines after the first warm-start
     from plane 0's compiled executables (the serverless warm-container
     ladder, extended across planes); stub engines take one oracle each from
-    ``stub_oracles``."""
+    ``stub_oracles``.  A heterogeneous ``cfg.fleet`` (DESIGN.md §2.8)
+    rides into every plane verbatim: each plane runs the same catalog of
+    machine types, speeds, cost rates and backends."""
     from .engine import ServingEngine   # lazy: keep this module JAX-free
     planes, warm = [], None
     for i in range(n_planes):

@@ -41,12 +41,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.controlplane import ControlConfig, ControlPlane, Substrate
+from ..core.fleet import DEFAULT_MTYPE, FleetSpec, MachineSpec
 from ..core.pmf import PMF
 from ..core.pruning import PruningConfig
 from ..core.tasks import Machine, Task
 from ..models import transformer as T
 from .autoscale import ElasticityConfig, PoolScaler
-from .kvcache import PrefixKVCache
+from .kvcache import CombinedPrefixIndex, PrefixKVCache
 
 
 # ---------------------------------------------------------------------------
@@ -139,13 +140,20 @@ class ProcessingUnit:
     COLD_START = None     # measured once, shared across units
 
     def __init__(self, uid: int, model_cfg, params, max_len: int = 256,
-                 speed: float = 1.0, shared_fns=None):
+                 speed: float = 1.0, shared_fns=None,
+                 spec: MachineSpec | None = None):
         self.uid = uid
         self.cfg = model_cfg
         self.params = params
         self.max_len = max_len
-        self.machine = Machine(mid=uid, mtype="tpu", speed=speed,
-                               queue_size=4)
+        # "emulated" runs the same compiled executables on a deliberately
+        # slow virtual timeline (spec.speed < 1): the thesis's emulation
+        # mode standing in for a slower accelerator in a mixed pool
+        self.kind = ("emulated" if spec is not None
+                     and spec.backend == "emulated" else "compiled")
+        self.machine = (spec.build_machine(uid) if spec is not None
+                        else Machine(mid=uid, mtype=DEFAULT_MTYPE,
+                                     speed=speed, queue_size=4))
         if shared_fns is not None:
             # warm start: reuse the engine's compiled executables (the
             # paper's warm container)
@@ -236,16 +244,22 @@ class ProcessingUnit:
 
 
 class _StubUnit:
-    """Oracle-timed stand-in for ``ProcessingUnit`` (no JAX): used when the
-    engine runs in stub-execution mode for control-plane equivalence tests
-    and scheduler benchmarks."""
+    """Oracle-timed stand-in for ``ProcessingUnit`` (no JAX): every unit of
+    a stub-execution engine, or a ``backend="stub"`` fleet row inside a
+    live pool (a remote-endpoint stand-in: oracle-sampled duration, no
+    token payload).  Its machine shares ``DEFAULT_MTYPE`` with the live
+    unit default, so engine/simulator trace-equivalence tests exercise the
+    same PET keys by construction."""
 
     fns = ("stub",)   # non-None sentinel: clones count as warm starts
+    kind = "stub"
 
-    def __init__(self, uid: int, speed: float = 1.0):
+    def __init__(self, uid: int, spec: MachineSpec | None = None,
+                 speed: float = 1.0):
         self.uid = uid
-        self.machine = Machine(mid=uid, mtype="m0", speed=speed,
-                               queue_size=4)
+        self.machine = (spec.build_machine(uid) if spec is not None
+                        else Machine(mid=uid, mtype=DEFAULT_MTYPE,
+                                     speed=speed, queue_size=4))
         self.warm = True
 
     def warmup(self, prompt_len: int = 16, buckets=(1,)) -> float:
@@ -262,6 +276,11 @@ TICKS_PER_SEC = 100     # engine time unit: 1 tick = 10 ms
 @dataclass
 class EngineConfig:
     n_units: int = 2
+    # heterogeneous fleet catalog (DESIGN.md §2.8): machine types, speeds,
+    # per-machine cost rates and unit backends, shared verbatim with the
+    # simulator.  None reproduces today's pool: ``n_units`` identical
+    # default-spec units (when set, ``fleet.total`` overrides ``n_units``).
+    fleet: FleetSpec | None = None
     heuristic: str = "EDF"
     merging: str = "adaptive"          # none|conservative|aggressive|adaptive
     position_finder: str | None = None  # None|"linear"|"log" (Section 4.4.5)
@@ -332,7 +351,10 @@ class ServingEngine(Substrate):
         self.estimator = TimeEstimator()
         self._stub = stub_oracle is not None
         self.oracle = (stub_oracle if self._stub
-                       else _EngineOracle(self.estimator))
+                       else _EngineOracle(self.estimator,
+                                          np.random.default_rng(1)))
+        self.fleet = (cfg.fleet if cfg.fleet is not None
+                      else FleetSpec.homogeneous(cfg.n_units))
         self.units: list = []
         self.requests: dict[int, list[Request]] = {}   # task id -> requests
         self._inflight: dict[int, list[Request]] = {}  # executing task -> reqs
@@ -342,6 +364,7 @@ class ServingEngine(Substrate):
                       "cold_starts": 0, "warm_starts": 0, "scale_ups": 0,
                       "scale_downs": 0, "scale_decisions": 0,
                       "machine_seconds": 0.0, "extra_machine_seconds": 0.0,
+                      "cost": 0.0, "pool_cost": 0.0, "extra_pool_cost": 0.0,
                       "warmup_ticks": 0.0, "executions": 0,
                       "mapping_events": 0, "deferred": 0,
                       "deadlock_breaks": 0, "mapping_wall_s": 0.0,
@@ -349,27 +372,31 @@ class ServingEngine(Substrate):
                       "prefix_tokens_reused": 0,
                       "prefill_tokens": 0}  # prefix_* mirrored from kvcache
         self.cp = ControlPlane(self, cfg.control())
-        self.kvcache = None
-        if (cfg.prefix_cache and not self._stub
-                and model_cfg.family in ("dense", "vlm")):
-            self.kvcache = PrefixKVCache(
-                cfg.kv_cache_blocks, cfg.kv_block_size,
-                value_fn=self._block_value, clock_fn=lambda: self.clock)
-            # PREFIX-level similarity scoring rides the same trie
-            self.cp.detector.prefix_index = self.kvcache.index
-            # prefix-cache-aware mapping: heuristics see per-machine KV
-            # locality through MappingContext.prefix_overlap (units share
-            # one engine-wide cache today, so the machine argument is the
-            # seam for per-unit caches, not yet a discriminator)
+        #: per-unit paged KV caches, mid -> PrefixKVCache (DESIGN.md §2.4 /
+        #: §2.8): each compiled unit owns its blocks, so the mapping layer's
+        #: ``MappingContext.prefix_overlap`` discriminates *within* the
+        #: engine — a shared-prefix task is steered to the unit that
+        #: actually holds the KV, not merely to the right plane
+        self.kvcaches: dict[int, PrefixKVCache] = {}
+        #: counters carried over from scaler-retired units' caches, so
+        #: end-of-run prefix stats never shrink when a unit retires
+        self._retired_kv = {"hits": 0, "tokens_reused": 0, "lookups": 0,
+                            "inserts": 0, "evictions": 0}
+        self._kv_enabled = (cfg.prefix_cache and not self._stub
+                            and model_cfg.family in ("dense", "vlm"))
+        if self._kv_enabled:
+            # PREFIX-level similarity scoring reads the best match across
+            # every unit's trie (admission accounting + cross-plane routing)
+            self.cp.detector.prefix_index = CombinedPrefixIndex(self.kvcaches)
             self.cp.prefix_fn = self._prefix_locality
         self._rng = np.random.default_rng(0)
         self._rid = 0
-        for _ in range(cfg.n_units):
-            self._add_unit()
+        for spec in self.fleet.expand():
+            self._add_unit(spec)
         self.scaler = None
         if cfg.elasticity is not None and cfg.elasticity.max_extra > 0:
             self.scaler = PoolScaler(cfg.elasticity, _EngineUnitPool(self),
-                                     cfg.n_units)
+                                     len(self.units))
 
     # -- control-plane delegation --------------------------------------------
     @property
@@ -395,8 +422,22 @@ class ServingEngine(Substrate):
     def _unit(self, mid: int):
         return next(u for u in self.units if u.machine.mid == mid)
 
+    @property
+    def kvcache(self):
+        """The single per-unit cache when exactly one unit owns one — the
+        pre-fleet engine-wide attribute kept for single-unit callers; None
+        otherwise (multi-unit introspection goes through ``kvcaches``)."""
+        if len(self.kvcaches) == 1:
+            return next(iter(self.kvcaches.values()))
+        return None
+
     def _prefix_locality(self, task: Task, machine: Machine) -> int:
-        return self.detector.find_prefix_overlap(task.tokens)
+        """Per-unit KV locality: prompt tokens *this* machine's own cache
+        holds (0 for stub-backed units, which keep no KV)."""
+        cache = self.kvcaches.get(machine.mid)
+        if cache is None or task.tokens is None or len(task.tokens) < 2:
+            return 0
+        return cache.index.match_len(task.tokens, len(task.tokens) - 1)
 
     @property
     def warm_fns(self):
@@ -404,22 +445,40 @@ class ServingEngine(Substrate):
         return getattr(self, "_warm_fns", None)
 
     # -- elasticity -----------------------------------------------------------
-    def _add_unit(self) -> float:
-        """Start one unit; returns its warm-up charge in virtual ticks."""
+    def _add_unit(self, spec: MachineSpec | None = None) -> float:
+        """Start one unit of ``spec`` (default: the fleet's cheapest row —
+        elastic scale-up is cheapest-first, which on a homogeneous fleet is
+        the legacy clone); returns its warm-up charge in virtual ticks."""
+        if spec is None:
+            spec = self.fleet.cheapest()
         uid = self._next_uid = getattr(self, "_next_uid", 0) + 1
-        shared = self.units[0].fns if self.units else \
-            (self._warm_fns if getattr(self, "_warm_fns", None) else None)
-        if self._stub:
-            unit = _StubUnit(uid)
+        stub = self._stub or spec.backend == "stub"
+        # warm start from the first *compiled* unit's executables (a stub's
+        # sentinel fns must never leak into a ProcessingUnit), else from
+        # another engine's warm_fns (the cross-plane warm-container ladder)
+        shared = next((u.fns for u in self.units if u.kind != "stub"), None)
+        if shared is None and getattr(self, "_warm_fns", None) is not None:
+            shared = self._warm_fns
+        if stub:
+            if self._stub and self.units:
+                shared = self.units[0].fns   # stub clones count as warm
+            unit = _StubUnit(uid, spec)
         else:
-            unit = ProcessingUnit(uid, self.model_cfg, self.params,
-                                  self.cfg.max_len, shared_fns=shared)
+            unit = ProcessingUnit(
+                uid, self.model_cfg, self.params, self.cfg.max_len,
+                spec=spec,
+                shared_fns=None if shared == _StubUnit.fns else shared)
         cold = unit.warmup(buckets=self.cfg.batch_buckets)
-        self._warm_fns = unit.fns
+        if not stub or self._stub:
+            self._warm_fns = unit.fns
         if shared is None:
             self.stats["cold_starts"] += 1
         else:
             self.stats["warm_starts"] += 1
+        if self._kv_enabled and unit.kind != "stub":
+            self.kvcaches[unit.machine.mid] = PrefixKVCache(
+                self.cfg.kv_cache_blocks, self.cfg.kv_block_size,
+                value_fn=self._block_value, clock_fn=lambda: self.clock)
         # initial units are pre-warmed before traffic opens (the thesis's
         # SMSE starts its processing units ahead of the stream); cold/warm
         # start-up charges virtual time only for mid-run elastic scale-ups
@@ -451,8 +510,9 @@ class ServingEngine(Substrate):
 
         task = req.to_task(now, req.rid)
         # PREFIX-level admission scoring: partial overlap with cached KV is
-        # reuse the hash-identity levels below cannot see
-        if self.kvcache is not None and \
+        # reuse the hash-identity levels below cannot see (best match over
+        # every unit's cache)
+        if self._kv_enabled and \
                 self.detector.find_prefix_overlap(req.prompt) > 0:
             self.stats["prefix_candidates"] += 1
         self.requests[task.tid] = [req]
@@ -506,19 +566,27 @@ class ServingEngine(Substrate):
         self._inflight[task.tid] = reqs
         if not reqs:
             return 0.0
-        if self._stub:
-            self.stats["executions"] += 1
-            return self.oracle.sample(task, m)
-
         unit = self._unit(m.mid)
+        if self._stub or unit.kind == "stub":
+            # per-unit backend dispatch: a stub-backed unit in a live pool
+            # is the remote-endpoint stand-in — its duration is sampled
+            # from the oracle and it produces no token payload, so its
+            # results must never enter the result cache
+            task._stub_backend = not self._stub
+            self.stats["executions"] += 1
+            dur = self.oracle.sample(task, m)
+            self.stats["cost"] += dur * m.cost_rate
+            return dur
+
         prompt = reqs[0].prompt
+        cache = self.kvcaches.get(m.mid)
         prefix, hit = None, None
-        reusable = (self.kvcache is not None and len(prompt) > 1
+        reusable = (cache is not None and len(prompt) > 1
                     and len(prompt) <= self.cfg.prefix_max_prompt)
         if reusable:
             # pin the cached prefix for the whole execution: blocks can
             # never be evicted out from under a running prefill
-            hit = self.kvcache.lookup(prompt, max_tokens=len(prompt) - 1)
+            hit = cache.lookup(prompt, max_tokens=len(prompt) - 1)
             if hit:
                 prefix = self._gather_prefix(hit)
         self.stats["prefill_tokens"] += \
@@ -528,12 +596,12 @@ class ServingEngine(Substrate):
                                     prefix=prefix)
         if reusable and kv_out is not None and "k" in kv_out:
             kk, vv = kv_out["k"], kv_out["v"]
-            self.kvcache.insert(
+            cache.insert(
                 prompt,
                 lambda s0, s1: (np.asarray(kk[:, 0, s0:s1]),
                                 np.asarray(vv[:, 0, s0:s1])))
         if hit is not None and hit:
-            self.kvcache.release(hit)
+            cache.release(hit)
         self.stats["executions"] += 1
         dur = wall * self.cfg.time_scale / m.speed
         # TPU batching economics: batch-k costs (1 + marginal*(k-1)),
@@ -544,10 +612,15 @@ class ServingEngine(Substrate):
         key = self.estimator.key(task.op, len(reqs[0].prompt),
                                  max(r.n_new for r in reqs), len(reqs))
         self.estimator.observe(key, dur)
+        self.stats["cost"] += dur * m.cost_rate
         return dur
 
     def finish_execution(self, task: Task, m: Machine, now: float) -> int:
         reqs = self._inflight.pop(task.tid, [])
+        # stub-backed units in a live pool return no token payload — their
+        # empty results must not poison the result cache
+        cacheable = (self.cfg.result_cache
+                     and not getattr(task, "_stub_backend", False))
         missed = 0
         for r in reqs:
             r.status = "done"
@@ -560,7 +633,7 @@ class ServingEngine(Substrate):
             else:
                 self.stats["missed"] += 1
                 missed += 1
-            if self.cfg.result_cache and r.op == "generate":
+            if cacheable and r.op == "generate":
                 self.cache[(r.prompt, r.op, r.params_sig)] = list(r.tokens)
         return missed
 
@@ -607,31 +680,50 @@ class ServingEngine(Substrate):
             self.scaler.sync(self.cp.now)
             self.stats.update({k: self.scaler.stats[k] for k in (
                 "scale_ups", "scale_downs", "scale_decisions",
-                "machine_seconds", "extra_machine_seconds", "warmup_ticks")})
+                "machine_seconds", "extra_machine_seconds",
+                "pool_cost", "extra_pool_cost", "warmup_ticks")})
         else:
-            # fixed pool: the integral degenerates to pool x makespan
+            # fixed pool: the integrals degenerate to pool x makespan,
+            # billed per machine type through each unit's cost rate
             self.stats["machine_seconds"] = \
                 len(self.units) * c["last_completion"]
+            self.stats["pool_cost"] = c["last_completion"] * \
+                sum(m.cost_rate for m in self.machines)
         out = dict(self.stats)
-        if self.kvcache is not None:
-            # the cache's own counters are authoritative — the engine only
-            # hand-maintains what the cache cannot see (prefill_tokens,
-            # prefix_candidates)
-            kv = self.kvcache.stats
-            out.update(prefix_hits=kv["hits"],
-                       prefix_tokens_reused=kv["tokens_reused"],
-                       prefix_lookups=kv["lookups"],
-                       prefix_inserts=kv["inserts"],
-                       prefix_evictions=kv["evictions"],
-                       prefix_blocks_used=self.kvcache.pool.n_used)
+        if self.kvcaches or any(self._retired_kv.values()):
+            # the caches' own counters are authoritative — the engine only
+            # hand-maintains what they cannot see (prefill_tokens,
+            # prefix_candidates); per-unit caches aggregate by sum, plus
+            # the carried-over counters of scaler-retired units
+            kvs = list(self.kvcaches.values())
+            ret = self._retired_kv
+            out.update(
+                prefix_hits=ret["hits"] +
+                sum(c.stats["hits"] for c in kvs),
+                prefix_tokens_reused=ret["tokens_reused"] +
+                sum(c.stats["tokens_reused"] for c in kvs),
+                prefix_lookups=ret["lookups"] +
+                sum(c.stats["lookups"] for c in kvs),
+                prefix_inserts=ret["inserts"] +
+                sum(c.stats["inserts"] for c in kvs),
+                prefix_evictions=ret["evictions"] +
+                sum(c.stats["evictions"] for c in kvs),
+                prefix_blocks_used=sum(c.pool.n_used for c in kvs))
         return out
 
 
 class _EngineOracle:
-    """ExecOracle over the TimeEstimator (drives merging + pruning math)."""
+    """ExecOracle over the TimeEstimator (drives merging + pruning math).
 
-    def __init__(self, estimator: TimeEstimator):
+    ``mean_std``/``pmf`` dispatch per machine through ``machine.speed``
+    (consistent heterogeneity: an emulated accelerator at speed s is 1/s
+    slower across the board); ``sample`` times stub-backed units in a
+    mixed live pool, so the estimates the scheduler plans with and the
+    durations the remote-endpoint stand-ins report come from one model."""
+
+    def __init__(self, estimator: TimeEstimator, rng=None):
         self.est = estimator
+        self._rng = rng if rng is not None else np.random.default_rng(1)
         self.dims: dict[int, tuple[int, int]] = {}   # tid -> (plen, n_new)
 
     def note_task(self, tid: int, prompt_len: int, n_new: int) -> None:
@@ -656,12 +748,28 @@ class _EngineOracle:
         mu, sd = self.mean_std(task, machine)   # already in integer ticks
         return PMF.from_normal(max(mu, 1.0), max(sd, 0.5))
 
+    def sample(self, task: Task, machine) -> float:
+        """Ground-truth duration for a stub-backed unit in a live pool."""
+        mu, sd = self.mean_std(task, machine)
+        return float(max(1.0, self._rng.normal(mu, sd)))
+
 
 class _EngineUnitPool:
     """Autoscale pool adapter over the engine's processing units: grows
-    through ``_add_unit`` (warm-starting from the shared executables and
-    charging compile time via ``note_warmup``) and retires the last idle,
-    empty unit — never losing queued work."""
+    through ``_add_unit`` (cheapest fleet row first, warm-starting from the
+    shared executables and charging compile time via ``note_warmup``) and
+    retires the priciest idle, empty unit — never losing queued work.  On
+    a homogeneous fleet both rules collapse to the legacy behavior: the
+    one spec grows, the last idle unit retires.
+
+    Like the pre-subsystem engine (and unlike the simulator's extras-only
+    pool), shrink considers *every* idle unit — the PoolScaler enforces
+    only the pool-size floor, so on a heterogeneous fleet an expensive
+    idle base unit can retire while a cheap extra keeps working.  The
+    billing consequence is deliberate: `extra_machine_seconds` /
+    `extra_pool_cost` measure *net* spend above the base pool (count and
+    summed rate respectively), so swapping a pricey base unit for a cheap
+    extra is not billed as extra spend."""
 
     def __init__(self, eng: ServingEngine):
         self.eng = eng
@@ -669,14 +777,29 @@ class _EngineUnitPool:
     def size(self) -> int:
         return len(self.eng.units)
 
+    def cost_rate(self) -> float:
+        """Summed per-machine cost rate of the live pool (the per-mtype
+        billing integrand, Fig. 5.19)."""
+        return sum(u.machine.cost_rate for u in self.eng.units)
+
     def grow(self, now: float) -> float:
         return self.eng._add_unit()
 
     def shrink(self, now: float) -> bool:
         units = self.eng.units
-        for i in range(len(units) - 1, -1, -1):
-            m = units[i].machine
-            if not m.queue and m.running is None and m.busy_until <= now:
-                units.pop(i)
-                return True
-        return False
+        idle = [i for i, u in enumerate(units)
+                if not u.machine.queue and u.machine.running is None
+                and u.machine.busy_until <= now]
+        if not idle:
+            return False
+        # priciest-first retirement; the last-added unit breaks cost ties
+        # (identical to the legacy last-idle scan on a homogeneous pool)
+        i = max(idle, key=lambda j: (units[j].machine.cost_rate, j))
+        unit = units.pop(i)
+        cache = self.eng.kvcaches.pop(unit.machine.mid, None)
+        if cache is not None:
+            # carry the retired cache's counters so end-of-run prefix
+            # stats never shrink (mirrors the simulator's bookkeeping)
+            for k in self.eng._retired_kv:
+                self.eng._retired_kv[k] += cache.stats[k]
+        return True

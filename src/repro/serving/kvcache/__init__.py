@@ -8,9 +8,9 @@ its prompt.  Used by both the live serving engine (real KV payloads) and
 the discrete-event simulator (analytical, payload-free).
 """
 
-from .cache import CacheHit, PrefixKVCache
+from .cache import CacheHit, CombinedPrefixIndex, PrefixKVCache
 from .pool import Block, BlockPool
 from .trie import PrefixIndex, TrieNode
 
-__all__ = ["Block", "BlockPool", "CacheHit", "PrefixIndex", "PrefixKVCache",
-           "TrieNode"]
+__all__ = ["Block", "BlockPool", "CacheHit", "CombinedPrefixIndex",
+           "PrefixIndex", "PrefixKVCache", "TrieNode"]

@@ -25,7 +25,7 @@ from dataclasses import dataclass, field
 from .pool import Block, BlockPool
 from .trie import PrefixIndex
 
-__all__ = ["CacheHit", "PrefixKVCache"]
+__all__ = ["CacheHit", "CombinedPrefixIndex", "PrefixKVCache"]
 
 
 @dataclass
@@ -166,3 +166,22 @@ class PrefixKVCache:
 
     def __len__(self) -> int:
         return len(self.index)
+
+
+class CombinedPrefixIndex:
+    """Duck-typed prefix index over many per-unit caches (a live view of a
+    ``mid -> PrefixKVCache`` dict): the best match across every unit.
+
+    With per-unit KV caches (heterogeneous-fleet engines, per-machine
+    simulator mode) the SimilarityDetector's PREFIX level still needs one
+    engine-wide score for admission accounting and cross-plane routing —
+    the deepest prefix *any* unit holds — while the per-machine
+    ``MappingContext.prefix_overlap`` term reads each unit's own index to
+    discriminate within the pool."""
+
+    def __init__(self, caches: dict):
+        self._caches = caches       # shared with the owner; never copied
+
+    def match_len(self, tokens, max_tokens: int | None = None) -> int:
+        return max((c.index.match_len(tokens, max_tokens)
+                    for c in self._caches.values()), default=0)

@@ -15,6 +15,7 @@
 import numpy as np
 import pytest
 
+from repro.core.fleet import FleetSpec
 from repro.core.simulation import PETOracle, SimConfig, Simulator
 from repro.core.tasks import Machine, PETMatrix, Task
 from repro.serving.autoscale import (SCALER_POLICIES, ElasticityConfig,
@@ -247,7 +248,7 @@ class TestCrossSubstrateEquivalence:
 
         sim = Simulator(
             _mirror_tasks(trace),
-            [Machine(mid=1, mtype="m0", queue_size=4)],
+            FleetSpec.homogeneous(1),   # the stub engine's machines exactly
             PETOracle(pet, seed=11),
             SimConfig(heuristic="EDF", merging="none", elasticity=el))
         sim.cp.trace = []

@@ -42,6 +42,15 @@ def test_serve_cli_autoscale():
     assert '"warmup_ticks"' in out
 
 
+def test_serve_cli_fleet():
+    out = _run(["repro.launch.serve", "--requests", "8", "--rate", "0.5",
+                "--fleet", "tpu:1:1.0:1.0,cpu:1:0.5:0.25",
+                "--heuristic", "MCMD", "--max-extra-units", "0"])
+    # the fleet spec and the per-mtype cost counters ride in the summary
+    assert '"fleet": "tpu:1:1:1:auto:4,cpu:1:0.5:0.25:auto:4"' in out
+    assert '"cost"' in out and '"pool_cost"' in out
+
+
 def test_serve_cli_multiplane():
     out = _run(["repro.launch.serve", "--requests", "10", "--units", "1",
                 "--planes", "2", "--router", "affinity", "--rate", "0.5"])

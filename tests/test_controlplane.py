@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.controlplane import ControlConfig, ControlPlane, Substrate
+from repro.core.fleet import FleetSpec
 from repro.core.pruning import PruningConfig
 from repro.core.simulation import PETOracle, SimConfig, Simulator
 from repro.core.tasks import Machine, PETMatrix, Task
@@ -266,9 +267,9 @@ class TestDecisionEquivalence:
 
         sim = Simulator(
             _mirror_tasks(trace),
-            # mirror the stub units: mids 1..n, mtype m0, queue_size 4
-            [Machine(mid=i + 1, mtype="m0", queue_size=4)
-             for i in range(n_units)],
+            # the engine's default fleet, so the simulator exercises the
+            # same machines (mids, mtypes, PET keys) by construction
+            FleetSpec.homogeneous(n_units),
             PETOracle(pet, seed=11),
             SimConfig(hard_deadlines=cfg_kw["pruning"] is not None,
                       **cfg_kw))
@@ -306,7 +307,7 @@ class TestDecisionEquivalence:
 
         sim = Simulator(
             _mirror_tasks(trace),
-            [Machine(mid=1, mtype="m0", queue_size=4)],
+            FleetSpec.homogeneous(1),
             PETOracle(pet, seed=11),
             SimConfig(hard_deadlines=True, **cfg_kw))
         sim.cp.trace = []

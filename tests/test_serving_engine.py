@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import ARCHS
+from repro.core.fleet import FleetSpec
 from repro.models import transformer as T
 from repro.serving.engine import EngineConfig, Request, ServingEngine
 
@@ -212,6 +213,55 @@ class TestPrefixCache:
         assert eng.stats["prefix_candidates"] == 1
         assert eng.detector.find_prefix_overlap(sys_p + (60,)) == 32
 
+    def test_per_unit_caches_attribute_hits_to_the_owning_unit(self):
+        """Two units, shared-system-prompt traffic arriving one at a time:
+        the per-unit locality term (MappingContext.prefix_overlap) steers
+        every follow-up onto the unit that cached the prefix, so its cache
+        takes all the hits and the other unit's cache stays cold — the
+        within-engine discrimination per-unit caches exist for."""
+        eng = _engine(n_units=2, prefix_cache=True, kv_block_size=16,
+                      kv_cache_blocks=64)
+        assert len(eng.kvcaches) == 2
+        assert eng.kvcache is None          # no single engine-wide cache
+        sys_p = tuple(range(1, 33))
+        rng = np.random.default_rng(0)
+        n = 6
+        for _ in range(n):
+            suffix = tuple(rng.integers(40, _CFG.vocab, size=4).tolist())
+            r = Request(prompt=sys_p + suffix, n_new=1, deadline=1e9)
+            eng.run([(eng.clock, r)])
+        stats = eng.collect_stats()
+        assert stats["prefix_hits"] == n - 1
+        per_unit = sorted(c.stats["hits"] for c in eng.kvcaches.values())
+        assert per_unit == [0, n - 1]       # one owner, zero strays
+        # and the mapping layer reports the discrimination directly
+        probe = Request(prompt=sys_p + (40, 41), deadline=1e9).to_task(0, 0)
+        scores = sorted(eng._prefix_locality(probe, m)
+                        for m in eng.machines)
+        assert scores == [0, 32]
+
+    def test_retired_unit_keeps_its_prefix_counters(self):
+        """Retiring an idle unit must carry its cache counters into the
+        engine totals — end-of-run prefix stats never shrink (mirrors the
+        simulator's retired-eviction bookkeeping)."""
+        from repro.serving.engine import _EngineUnitPool
+        eng = _engine(n_units=2, prefix_cache=True, kv_block_size=16,
+                      kv_cache_blocks=64)
+        sys_p = tuple(range(1, 33))
+        for i in range(4):
+            r = Request(prompt=sys_p + (40 + i, 41 + i), n_new=1,
+                        deadline=1e9)
+            eng.run([(eng.clock, r)])
+        before = eng.collect_stats()
+        assert before["prefix_hits"] == 3
+        pool = _EngineUnitPool(eng)
+        assert pool.shrink(eng.clock) and pool.shrink(eng.clock)
+        assert not eng.units
+        after = eng.collect_stats()
+        for k in ("prefix_hits", "prefix_tokens_reused", "prefix_lookups",
+                  "prefix_inserts", "prefix_evictions"):
+            assert after[k] == before[k], k
+
     def test_disabled_for_stateful_families(self):
         cfg = ARCHS["xlstm-125m"].reduced().scaled(
             n_layers=2, d_model=64, n_heads=2, remat=False)
@@ -224,3 +274,39 @@ class TestPrefixCache:
         r = Request(prompt=tuple(range(1, 20)), n_new=2, deadline=1e9)
         stats = eng.run([(0.0, r)])
         assert stats["completed"] == 1 and len(r.tokens) == 2
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous fleet: mixed backends in one live pool (DESIGN.md §2.8)
+# ---------------------------------------------------------------------------
+
+class TestMixedBackendPool:
+    def test_compiled_emulated_and_stub_units_in_one_pool(self):
+        """One live pool mixing all three backend kinds: compiled and
+        emulated units run real model steps (emulated on a slower virtual
+        timeline), the stub row is an oracle-timed remote stand-in, and
+        every request is accounted exactly once."""
+        fleet = FleetSpec.parse(
+            "tpu:1:1.0:1.0:compiled,cpu:1:0.25:0.2:emulated,"
+            "remote:1:1.0:0.1:stub")
+        eng = ServingEngine(_CFG, _PARAMS, EngineConfig(
+            fleet=fleet, elasticity=None, merging="none",
+            result_cache=False, prefix_cache=False, max_len=96,
+            batch_buckets=(1, 2, 4)))
+        assert [u.kind for u in eng.units] == \
+            ["compiled", "emulated", "stub"]
+        assert [m.speed for m in eng.machines] == [1.0, 0.25, 1.0]
+        rng = np.random.default_rng(3)
+        n = 9
+        trace = [(6.0 * i, Request(
+            prompt=tuple(rng.integers(1, _CFG.vocab, size=6).tolist()),
+            n_new=2, deadline=1e9)) for i in range(n)]
+        stats = eng.run(trace)
+        assert stats["completed"] == n
+        assert stats["executions"] == n
+        assert stats["cost"] > 0.0
+        # the model-backed units really produced tokens; a stub-run
+        # request (if any landed there) is done with an empty payload
+        done = [r for _, r in trace]
+        assert all(r.status == "done" for r in done)
+        assert any(len(r.tokens) == 2 for r in done)
