@@ -382,6 +382,107 @@ def autoscale_policies(csv: Csv, checks: dict, n_phases: int = 4,
     return rows
 
 
+def _tight_trace(n=40, seed=1, n_prompts=5, deadline=20.0, rate=2.0):
+    """Deadlines tight enough that the pruner's drop pass engages — the
+    regime where per-drop attribution actually has something to say."""
+    rng = np.random.default_rng(seed)
+    prompts = [tuple(rng.integers(1, 1000, size=8).tolist())
+               for _ in range(n_prompts)]
+    out, t = [], 0.0
+    for _ in range(n):
+        out.append((t, Request(
+            prompt=prompts[int(rng.integers(0, n_prompts))], op="generate",
+            n_new=int(rng.integers(1, 4)), seed=int(rng.integers(0, 2)),
+            deadline=t + deadline)))
+        t += float(rng.exponential(1.0 / rate))
+    return out
+
+
+def qos_attribution(csv: Csv, checks: dict, n_requests: int = 40,
+                    strict: bool = True, emit: tuple | None = None
+                    ) -> list[dict]:
+    """QoS attribution by policy (DESIGN.md §2.9): every drop carries its
+    reason (and, for pruner drops, the chance-of-success at decision time),
+    every defer its chance vs threshold — aggregated into one row per
+    policy for results/render_experiments.py.  Stub-execution engines with
+    a repro.obs.Telemetry attached; each run is re-checked against a
+    telemetry-off twin (zero perturbation, the recorder's core contract).
+
+    ``emit=(trace_path, metrics_path)`` additionally exports the last
+    policy's Chrome trace + metrics snapshot and schema-validates both
+    (the CI bench-smoke artifact)."""
+    from collections import Counter
+
+    from repro.obs import (Telemetry, chrome_trace, validate_chrome_trace,
+                           validate_metrics_snapshot, write_chrome_trace,
+                           write_metrics)
+
+    pet = PETMatrix.generate(["generate"], ["m0"],
+                             np.random.default_rng(3), mean_range=(8, 16))
+    trace = _tight_trace(n=n_requests)
+    rows = []
+    tel = None
+    for tag, cfg_kw in (
+            ("edf-merge", dict(heuristic="EDF", merging="adaptive",
+                               pruning=None)),
+            ("edf-pruned", dict(heuristic="EDF", merging="adaptive",
+                                pruning=PruningConfig(
+                                    initial_defer_threshold=0.1,
+                                    base_drop_threshold=0.3,
+                                    dynamic_defer=True))),
+            ("msd-pruned", dict(heuristic="MSD", merging="conservative",
+                                pruning=PruningConfig(
+                                    initial_defer_threshold=0.1,
+                                    base_drop_threshold=0.3,
+                                    dynamic_defer=True)))):
+        def build():
+            return ServingEngine(None, None, EngineConfig(
+                n_units=2, elasticity=None, result_cache=False,
+                prefix_cache=False, position_finder=None, **cfg_kw),
+                stub_oracle=PETOracle(pet, seed=11))
+        tel = Telemetry()
+        eng = build()
+        eng.attach_telemetry(tel)
+        eng.cp.trace = []
+        stats = eng.run(trace)
+        off = build()
+        off.cp.trace = []
+        off.run(trace)
+        checks[f"qos_zero_perturbation_{tag}"] = \
+            off.cp.trace == eng.cp.trace
+        reasons = Counter(e["reason"] for e in tel.events_of("drop"))
+        row = {
+            "policy": tag,
+            "requests": len(trace),
+            "on_time": stats["on_time"],
+            "missed": stats["missed"],
+            "dropped": stats["dropped"],
+            "drop_reasons": dict(sorted(reasons.items())),
+            "defers": len(tel.events_of("defer")),
+            "merge_saving": round(sum(e["saving"] for e in
+                                      tel.events_of("merge_saving")), 3),
+            "pruning_wall_s": stats["pruning_wall_s"],
+        }
+        rows.append(row)
+        csv.add(f"qos_attribution_{tag}", on_time=row["on_time"],
+                dropped=row["dropped"], defers=row["defers"],
+                reasons="/".join(f"{k}:{v}"
+                                 for k, v in row["drop_reasons"].items()))
+        # attribution must be complete: reasons partition the drop count
+        checks[f"qos_drops_attributed_{tag}"] = \
+            sum(reasons.values()) == stats["dropped"]
+        if strict and cfg_kw["pruning"] is not None:
+            checks[f"qos_pruner_engaged_{tag}"] = reasons.get("pruned", 0) > 0
+    if emit is not None:
+        trace_path, metrics_path = emit
+        validate_chrome_trace(chrome_trace(tel.events))
+        validate_metrics_snapshot(tel.metrics.snapshot())
+        write_chrome_trace(tel.events, trace_path)
+        write_metrics(tel.metrics, metrics_path)
+        checks["qos_obs_schema_valid"] = True
+    return rows
+
+
 def _hetero_trace(n=80, rate=0.2, deadline=300.0, seed=5):
     """Moderate load, slack deadlines: the regime where a cost-aware
     mapper can drain work onto slow-but-cheap machines without missing."""
@@ -559,11 +660,14 @@ def run(csv: Csv, n_requests: int = 60) -> dict:
     autoscale_rows = autoscale_policies(csv, checks)
     # --- heterogeneous fleet: cost-aware mapping + per-mtype billing -------
     hetero_rows = hetero_fleet(csv, checks)
+    # --- QoS attribution: drop/defer reasons x policy via telemetry --------
+    qos_rows = qos_attribution(csv, checks)
     with open(OUT_PATH, "w") as f:
         json.dump({"bench": "serving_control_plane", "rows": rows,
                    "router_rows": router_rows,
                    "autoscale_rows": autoscale_rows,
-                   "hetero_rows": hetero_rows}, f, indent=1)
+                   "hetero_rows": hetero_rows,
+                   "qos_rows": qos_rows}, f, indent=1)
     return checks
 
 
@@ -587,9 +691,17 @@ if __name__ == "__main__":
         autoscale_rows = autoscale_policies(csv, checks, n_phases=1,
                                             strict=False)
         hetero_rows = hetero_fleet(csv, checks, n_requests=32, strict=False)
+        # observability smoke: attribution rows + the Perfetto trace and
+        # metrics snapshot CI schema-validates and uploads as artifacts
+        here = os.path.dirname(OUT_PATH)
+        qos_rows = qos_attribution(
+            csv, checks, strict=False,
+            emit=(os.path.join(here, "BENCH_smoke_trace.json"),
+                  os.path.join(here, "BENCH_smoke_metrics.json")))
         payload = {"bench": "serving_autoscale_smoke",
                    "autoscale_rows": autoscale_rows,
-                   "hetero_rows": hetero_rows}
+                   "hetero_rows": hetero_rows,
+                   "qos_rows": qos_rows}
         # own artifact: never clobber the full run's BENCH_serving.json
         smoke_path = OUT_PATH.replace("BENCH_serving",
                                       "BENCH_autoscale_smoke")

@@ -14,6 +14,7 @@ within a plane merged requests share one batched prefill+decode execution.
 
 import argparse
 import sys
+import time
 from collections import Counter
 
 sys.path.insert(0, "src")
@@ -23,9 +24,12 @@ import numpy as np  # noqa: E402
 from repro.configs.registry import get_arch  # noqa: E402
 from repro.core.pruning import PruningConfig  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
+from repro.obs import (Telemetry, write_chrome_trace,  # noqa: E402
+                       write_metrics)
 from repro.serving.autoscale import ElasticityConfig  # noqa: E402
 from repro.serving.cluster import Router, make_engine_planes  # noqa: E402
-from repro.serving.engine import EngineConfig, Request  # noqa: E402
+from repro.serving.engine import (TICKS_PER_SEC, EngineConfig,  # noqa: E402
+                                  Request)
 
 import jax  # noqa: E402
 
@@ -37,6 +41,11 @@ def main():
     ap.add_argument("--router", default="affinity")
     ap.add_argument("--merging", default="adaptive")
     ap.add_argument("--no-pruning", action="store_true")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-viewable Chrome trace JSON here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a metrics snapshot here (.prom/.txt -> "
+                         "Prometheus text, else JSON)")
     args = ap.parse_args()
 
     cfg = get_arch("smollm-360m").reduced().scaled(n_layers=2, remat=False)
@@ -47,8 +56,11 @@ def main():
         pruning=None if args.no_pruning else PruningConfig(
             initial_defer_threshold=0.1, base_drop_threshold=0.05),
         max_len=64, batch_buckets=(1, 2, 4, 8))
+    tel = None
+    if args.trace_out or args.metrics_out:
+        tel = Telemetry(wall_clock=time.perf_counter)
     router = Router(make_engine_planes(cfg, params, ecfg, args.planes),
-                    policy=args.router)
+                    policy=args.router, telemetry=tel)
 
     rng = np.random.default_rng(0)
     # shared-system-prompt traffic: a few hot >=32-token system prompts with
@@ -97,6 +109,16 @@ def main():
               f"merges {p.get('merges', 0)}, "
               f"executions {p.get('executions', 0)}, "
               f"dropped {p.get('dropped', 0)}")
+
+    if tel is not None:
+        if args.trace_out:
+            write_chrome_trace(tel.events, args.trace_out,
+                               us_per_unit=1e6 / TICKS_PER_SEC)
+            print(f"\ntrace written      {args.trace_out} "
+                  f"({len(tel.events)} events; open in ui.perfetto.dev)")
+        if args.metrics_out:
+            write_metrics(tel.metrics, args.metrics_out)
+            print(f"metrics written    {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -184,6 +184,33 @@ def hetero_fleet_table(path="../BENCH_serving.json"):
     return "\n".join(out)
 
 
+def qos_attribution_table(path="../BENCH_serving.json"):
+    """QoS attribution: drop/defer reasons x policy, counted from the
+    telemetry event stream — why requests failed, not just how many
+    (DESIGN.md §2.9; benchmarks/serving.py::qos_attribution)."""
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return "(run `python -m benchmarks.run --only serving` first)"
+    rows = json.load(open(p)).get("qos_rows", [])
+    if not rows:
+        return "(re-run `python -m benchmarks.run --only serving`: " \
+               "no qos_rows in BENCH_serving.json)"
+    reasons = sorted({r for row in rows for r in row["drop_reasons"]})
+    head = ["policy", "requests", "on-time", "missed", "dropped"] + \
+        [f"drop: {r}" for r in reasons] + \
+        ["defers", "merge saving", "pruning wall (ms)"]
+    out = ["| " + " | ".join(head) + " |",
+           "|" + "---|" * len(head)]
+    for r in rows:
+        cells = [r["policy"], r["requests"], r["on_time"], r["missed"],
+                 r["dropped"]]
+        cells += [r["drop_reasons"].get(reason, 0) for reason in reasons]
+        cells += [r["defers"], f"{r['merge_saving']:.1f}",
+                  f"{1e3 * r['pruning_wall_s']:.2f}"]
+        out.append("| " + " | ".join(str(c) for c in cells) + " |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     cur = load("dryrun.jsonl")
     base = load("dryrun_baseline.jsonl")
@@ -209,3 +236,6 @@ if __name__ == "__main__":
     print("\n## §Heterogeneous fleet — cost-aware mapping + per-mtype "
           "billing (homogeneous vs mixed)\n")
     print(hetero_fleet_table())
+    print("\n## §QoS attribution — drop/defer reasons x policy "
+          "(from the telemetry stream)\n")
+    print(qos_attribution_table())

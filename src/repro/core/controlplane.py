@@ -32,6 +32,7 @@ from .heuristics import MappingContext, make_heuristic
 from .merging import SimilarityDetector, merge_tasks
 from .pruning import Pruner, PruningConfig
 from .tasks import Machine, Task
+from ..obs.telemetry import NULL
 
 __all__ = ["ControlConfig", "ControlPlane", "Substrate"]
 
@@ -129,9 +130,14 @@ class ControlPlane:
         self.stats = {"merges": 0, "merge_rejected": 0, "mapping_events": 0,
                       "deferred": 0, "dropped_requests": 0,
                       "deadlock_breaks": 0, "last_completion": 0.0,
-                      "mapping_wall_s": 0.0}
+                      "mapping_wall_s": 0.0, "pruning_wall_s": 0.0}
         #: set to a list to record the decision sequence (see module doc)
         self.trace: list | None = None
+        #: telemetry recorder (repro.obs); NULL is a no-op — decisions never
+        #: read it, so attaching a real recorder cannot perturb scheduling
+        self.tel = NULL
+        #: plane ordinal stamped on every telemetry event (router sets it)
+        self.plane_id = 0
         #: optional callable(cp) invoked after every mapping event
         self.after_mapping = None
         #: optional callable(task, machine) -> cached-prefix tokens, wired by
@@ -229,6 +235,11 @@ class ControlPlane:
                     task = self.sub.ingest(item, self.now)
                     if task is not None:
                         self.submit(task)
+                    else:
+                        # served at ingest (result-cache hit): no scheduling
+                        self.tel.event(self.now, "served_at_ingest",
+                                       plane=self.plane_id)
+                        self.tel.metrics.inc("served_at_ingest")
                 self._mapping_event()
             elif kind == "finish":
                 mid, epoch = payload
@@ -255,9 +266,14 @@ class ControlPlane:
         self._n_arrivals += 1
         if task.queue_rank is None:
             task.queue_rank = task.arrival
+        idx = self._index(task)
+        self.tel.event(self.now, "arrive", req=idx, plane=self.plane_id,
+                       ttype=task.ttype, deadline=round(task.deadline, 9))
+        self.tel.metrics.inc("requests_arrived")
         if self.cfg.merging == "none":
             self.batch.append(task)
-            self._log("admit", self._index(task))
+            self._log("admit", idx)
+            self.tel.event(self.now, "admit", req=idx, plane=self.plane_id)
             return None
 
         hit = self.detector.find(task)
@@ -280,16 +296,30 @@ class ControlPlane:
                     self._log("merge", self._index(task),
                               self._index(existing), level.label,
                               decision.position)
+                    self.tel.event(self.now, "merge", req=self._index(task),
+                                   into=self._index(existing),
+                                   level=level.label, reason=decision.reason,
+                                   position=decision.position,
+                                   plane=self.plane_id)
+                    self.tel.metrics.inc("merges", level=level.label)
                     if decision.position is not None:
                         self._apply_position(existing, decision.position)
                 else:
                     self.stats["merge_rejected"] += 1
                     self._log("merge_rejected", self._index(task),
                               self._index(existing), level.label)
+                    self.tel.event(self.now, "merge_rejected",
+                                   req=self._index(task),
+                                   into=self._index(existing),
+                                   level=level.label, reason=decision.reason,
+                                   plane=self.plane_id)
+                    self.tel.metrics.inc("merge_rejected", level=level.label)
         self.detector.on_arrival(task, hit[1] if hit else None, merged, level)
         if merged is None:
             self.batch.append(task)
             self._log("admit", self._index(task))
+            self.tel.event(self.now, "admit", req=self._index(task),
+                           plane=self.plane_id)
         return merged
 
     def _apply_position(self, merged: Task, pos: int) -> None:
@@ -318,13 +348,20 @@ class ControlPlane:
         if self.cfg.hard_deadlines:
             self._purge_infeasible()
         if self.pruner is not None:
-            # pruner dropping pass over machine queues (Fig. 5.5)
+            # pruner dropping pass over machine queues (Fig. 5.5); its wall
+            # time is the mechanism's own overhead (§5.5), attributed apart
+            tp0 = time.perf_counter()
             dropped = self.pruner.drop_pass(machines, self.now,
                                             self._misses_since_event)
+            self.stats["pruning_wall_s"] += time.perf_counter() - tp0
             self._misses_since_event = 0
             for t in dropped:
                 self._evict_if_running(t, machines)
-                self._drop(t)
+                info = self.pruner.drop_info.get(t.tid, {})
+                self._drop(t, reason=("evicted_running"
+                                      if info.get("evicted") else "pruned"),
+                           chance=info.get("chance"),
+                           threshold=info.get("threshold"))
         else:
             self._misses_since_event = 0
 
@@ -335,13 +372,25 @@ class ControlPlane:
                     and self.heuristic.name not in ("PAM", "PAMF")):
                 # Eq. 5.10 estimator runs every mapping event regardless of
                 # the plugged-in heuristic (Fig. 5.5)
+                tp0 = time.perf_counter()
                 self.pruner.refresh_defer_threshold(
                     self.batch, machines, ctx.chance, self.now)
+                self.stats["pruning_wall_s"] += time.perf_counter() - tp0
             before_defer = self.pruner.stats["deferred"] if self.pruner else 0
+            if self.pruner is not None:
+                self.pruner.defer_log.clear()
             mapped = self.heuristic.map_batch(self.batch, machines, ctx)
             if self.pruner is not None:
                 self.stats["deferred"] += \
                     self.pruner.stats["deferred"] - before_defer
+                if self.tel.enabled:
+                    for tid, chance, thr in self.pruner.defer_log:
+                        self.tel.event(self.now, "defer",
+                                       task=self._arrival_index.get(tid, -1),
+                                       chance=round(chance, 9),
+                                       threshold=round(thr, 9),
+                                       plane=self.plane_id)
+                        self.tel.metrics.inc("defers")
             mapped_ids = {t.tid for t, _ in mapped}
             if mapped_ids:
                 self.batch = [t for t in self.batch if t.tid not in mapped_ids]
@@ -349,7 +398,13 @@ class ControlPlane:
                     t.status = "mapped"
                     self.detector.on_departure(t)
                     self._log("map", self._index(t), machines.index(m))
-        self.stats["mapping_wall_s"] += time.perf_counter() - t0
+                    self.tel.event(self.now, "map", task=self._index(t),
+                                   machine=m.mid, plane=self.plane_id)
+        dt = time.perf_counter() - t0
+        self.stats["mapping_wall_s"] += dt
+        self.tel.metrics.inc("mapping_wall_s_total", dt)
+        self.tel.metrics.observe("mapping_event_wall_s", dt)
+        self.tel.metrics.gauge("pruning_wall_s", self.stats["pruning_wall_s"])
         # start idle machines (execution time is the substrate's, not ours)
         for m in machines:
             if m.running is None and m.queue:
@@ -363,7 +418,7 @@ class ControlPlane:
             (dead if t.effective_deadline <= self.now else live).append(t)
         for t in dead:
             self.detector.on_departure(t)
-            self._drop(t)
+            self._drop(t, reason="infeasible")
         self.batch = live
 
     def _evict_if_running(self, task: Task, machines: list[Machine]) -> None:
@@ -375,13 +430,27 @@ class ControlPlane:
                 m.run_end = m.busy_until = self.now
                 self._epoch[m.mid] = self._epoch.get(m.mid, 0) + 1
 
-    def _drop(self, task: Task) -> None:
+    def _drop(self, task: Task, reason: str = "dropped",
+              chance: float | None = None,
+              threshold: float | None = None) -> None:
         task.status = "dropped"
-        n = len(task.all_requests())
+        reqs = task.all_requests()
+        n = len(reqs)
         self.sub.on_drop(task, self.now)
         self._misses_since_event += n
         self.stats["dropped_requests"] += n
         self._log("drop", self._index(task))
+        if self.tel.enabled:
+            for r in reqs:
+                self.tel.event(
+                    self.now, "drop",
+                    req=self._arrival_index.get(r.tid, -1),
+                    task=self._index(task), reason=reason,
+                    chance=None if chance is None else round(chance, 9),
+                    threshold=(None if threshold is None
+                               else round(threshold, 9)),
+                    plane=self.plane_id)
+            self.tel.metrics.inc("drops", n, reason=reason)
 
     def _deadlock_drain(self) -> None:
         """No future events and an unmappable batch: nothing can ever make
@@ -390,7 +459,7 @@ class ControlPlane:
         self.stats["deadlock_breaks"] += 1
         for t in list(self.batch):
             self.detector.on_departure(t)
-            self._drop(t)
+            self._drop(t, reason="deadlock")
         self.batch = []
 
     # -- machine execution ----------------------------------------------------
@@ -400,16 +469,26 @@ class ControlPlane:
         while m.queue:
             task = m.queue.pop(0)
             if self.cfg.hard_deadlines and task.effective_deadline <= self.now:
-                self._drop(task)
+                self._drop(task, reason="expired_at_start")
                 continue
             dur = self.sub.begin_execution(task, m, self.now)
             task.status = "running"
+            task._exec_start = self.now
             m.running = task
             m.run_end = m.busy_until = self.now + dur
             self._epoch[m.mid] = self._epoch.get(m.mid, 0) + 1
             self._push(m.run_end, "finish", (m.mid, self._epoch[m.mid]))
             self._log("start", self._index(task),
                       self.sub.machines.index(m), round(self.now, 6))
+            if self.tel.enabled:
+                reqs = task.all_requests()
+                self.tel.event(self.now, "exec_start",
+                               task=self._index(task), machine=m.mid,
+                               plane=self.plane_id, n_requests=len(reqs),
+                               wait=round(self.now - task.arrival, 9))
+                for r in reqs:
+                    self.tel.metrics.observe("queue_wait",
+                                             self.now - r.arrival)
             return
 
     def _handle_finish(self, m: Machine) -> None:
@@ -422,4 +501,33 @@ class ControlPlane:
         self.stats["last_completion"] = max(self.stats["last_completion"],
                                             self.now)
         self._log("finish", self._index(task), round(self.now, 6), missed)
+        if self.tel.enabled:
+            reqs = task.all_requests()
+            self.tel.event(self.now, "exec_end", task=self._index(task),
+                           machine=m.mid, plane=self.plane_id,
+                           n_requests=len(reqs), missed=missed)
+            for r in reqs:
+                latency = self.now - r.arrival
+                slack = r.deadline - self.now
+                on_time = slack >= 0
+                self.tel.event(self.now, "complete",
+                               req=self._arrival_index.get(r.tid, -1),
+                               task=self._index(task),
+                               latency=round(latency, 9),
+                               slack=round(slack, 9), on_time=on_time,
+                               plane=self.plane_id)
+                self.tel.metrics.observe("latency", latency)
+                self.tel.metrics.observe("slack", slack)
+                self.tel.metrics.inc("completed")
+                self.tel.metrics.inc("on_time" if on_time else "missed")
+            if len(reqs) > 1:
+                # measured merge saving: one execution served k requests, so
+                # (k-1) duplicate executions of this measured length were
+                # avoided — the saving stream the reuse predictor trains on
+                start = getattr(task, "_exec_start", self.now)
+                saving = (self.now - start) * (len(reqs) - 1)
+                self.tel.event(self.now, "merge_saving",
+                               task=self._index(task), fanout=len(reqs),
+                               saving=round(saving, 9), plane=self.plane_id)
+                self.tel.metrics.observe("merge_saving", saving)
         self._start_next(m)

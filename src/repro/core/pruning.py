@@ -96,6 +96,12 @@ class Pruner:
         self.fairness = FairnessModule(self.cfg.fairness_factor)
         self.stats = {"dropped": 0, "deferred": 0, "drop_passes": 0,
                       "convolutions": 0}
+        #: decision-time telemetry (pure recording — never read back):
+        #: tid -> {chance, threshold, position[, evicted]} for the latest
+        #: drop pass; (tid, chance, threshold) per defer decision, drained
+        #: by the control plane each mapping event
+        self.drop_info: dict[int, dict] = {}
+        self.defer_log: list[tuple] = []
         self._chain_cache: dict = {}
         self._chance_cache: dict = {}
 
@@ -207,6 +213,7 @@ class Pruner:
         """Engage Eq. 5.11 toggle; when oversubscribed, walk machine queues
         head-first and drop tasks whose success chance <= threshold."""
         self.stats["drop_passes"] += 1
+        self.drop_info = {}
         engaged = self.toggle.observe(misses_since_last)
         if not (engaged and self.cfg.drop_enabled):
             return []
@@ -216,10 +223,16 @@ class Pruner:
                 # EVICT mode: an executing task past its deadline is killed
                 if now >= m.running.effective_deadline:
                     dropped.append(m.running)
+                    self.drop_info[m.running.tid] = {
+                        "chance": 0.0, "threshold": None, "position": -1,
+                        "evicted": True}
             keep: list[Task] = []
             for pos, (task, pct, p) in enumerate(self.machine_pcts(m, now)):
-                if p <= self.drop_threshold(task, pct, pos):
+                thr = self.drop_threshold(task, pct, pos)
+                if p <= thr:
                     dropped.append(task)
+                    self.drop_info[task.tid] = {
+                        "chance": p, "threshold": thr, "position": pos}
                     self.fairness.note_pruned(task.ttype)
                 else:
                     keep.append(task)
@@ -283,6 +296,7 @@ class Pruner:
         thr = self.defer_threshold * self.fairness.concession(task.ttype)
         if best_chance < thr:
             self.stats["deferred"] += 1
+            self.defer_log.append((task.tid, best_chance, thr))
             self.fairness.note_pruned(task.ttype)
             return True
         return False

@@ -165,6 +165,7 @@ class SimStats:
     energy: float = 0.0
     mapping_events: int = 0
     mapping_wall_s: float = 0.0
+    pruning_wall_s: float = 0.0
     deadlock_breaks: int = 0
     result_cache_hits: int = 0
     # autoscale accounting (DESIGN.md §2.7) ------------------------------------
@@ -228,6 +229,7 @@ class Simulator(Substrate):
                          if isinstance(machines, FleetSpec) else machines)
         self.oracle = oracle
         self.stats = SimStats()
+        self._tel = None                    # obs.Telemetry once attached
         self.cp = ControlPlane(self, self.cfg.control())
         self._rng = np.random.default_rng(self.cfg.seed)
         self._result_cache: set = set()
@@ -287,6 +289,29 @@ class Simulator(Substrate):
                              self.cfg.kv_block_size,
                              clock_fn=lambda: self.now)
 
+    # -- observability ---------------------------------------------------------
+    def attach_telemetry(self, tel, plane: int | None = None) -> None:
+        """Wire one ``repro.obs.Telemetry`` through every layer of this
+        simulator — the analytical mirror of
+        ``ServingEngine.attach_telemetry``, so the two substrates emit
+        diffable event streams from the same trace.  Recording only."""
+        self._tel = tel
+        if plane is not None:
+            self.cp.plane_id = plane
+        self.cp.tel = tel
+        if self.cfg.kv_per_machine:
+            for mid, cache in self.kvcaches.items():
+                cache.tel = tel
+                cache.tel_attrs = {"plane": self.cp.plane_id, "machine": mid}
+        elif self.kvcache is not None:
+            self.kvcache.tel = tel
+            self.kvcache.tel_attrs = {"plane": self.cp.plane_id}
+        if self.scaler is not None:
+            # scope mirrors the engine's unit pool: the sim's machine clones
+            # are the analytical twin of processing units
+            self.scaler.tel = tel
+            self.scaler.scope = "units"
+
     def _machine_cache(self, machine: Machine):
         """The cache an execution on ``machine`` reads/writes: its own in
         per-machine mode, the shared one otherwise."""
@@ -323,6 +348,7 @@ class Simulator(Substrate):
         s.merge_rejected = c["merge_rejected"]
         s.mapping_events = c["mapping_events"]
         s.mapping_wall_s = c["mapping_wall_s"]
+        s.pruning_wall_s = c["pruning_wall_s"]
         s.deferred = c["deferred"]
         s.deadlock_breaks = c["deadlock_breaks"]
         if self.scaler is not None:
@@ -473,7 +499,12 @@ class _SimMachinePool:
                         cost_rate=proto.cost_rate, power=proto.power)
         sim.machines.append(m)
         if sim.cfg.kv_per_machine and sim.cfg.prefix_cache_blocks > 0:
-            sim.kvcaches[m.mid] = sim._make_kvcache()
+            cache = sim._make_kvcache()
+            if sim._tel is not None:
+                cache.tel = sim._tel
+                cache.tel_attrs = {"plane": sim.cp.plane_id,
+                                   "machine": m.mid}
+            sim.kvcaches[m.mid] = cache
         return 0.0
 
     def shrink(self, now: float) -> bool:

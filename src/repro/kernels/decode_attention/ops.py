@@ -11,12 +11,21 @@ import jax
 
 from .decode_attention import decode_attention_pallas
 from .ref import decode_attention_ref
+from ...obs.profiling import profiled
 
 
 @partial(jax.jit, static_argnames=("block_s", "interpret", "use_kernel"))
-def decode_attention(q, k_cache, v_cache, lengths, block_s: int = 512,
-                     interpret: bool = True, use_kernel: bool = True):
+def _decode_attention_jit(q, k_cache, v_cache, lengths, block_s: int = 512,
+                          interpret: bool = True, use_kernel: bool = True):
     if use_kernel:
         return decode_attention_pallas(q, k_cache, v_cache, lengths,
                                        block_s=block_s, interpret=interpret)
     return decode_attention_ref(q, k_cache, v_cache, lengths)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, block_s: int = 512,
+                     interpret: bool = True, use_kernel: bool = True):
+    # launches route through the (no-op by default) kernel profiler
+    return profiled("decode_attention", _decode_attention_jit,
+                    q, k_cache, v_cache, lengths, block_s=block_s,
+                    interpret=interpret, use_kernel=use_kernel)

@@ -15,14 +15,26 @@ import numpy as np
 
 from .pmf_conv import pmf_conv_pallas
 from .ref import pmf_conv_ref
+from ...obs.profiling import profiled
 
 
 @partial(jax.jit, static_argnames=("interpret", "use_kernel"))
-def pmf_conv(pet, pct, dl, interpret: bool = True, use_kernel: bool = True):
-    """(out, success) for a batch of PEND_DROP convolutions."""
+def _pmf_conv_jit(pet, pct, dl, interpret: bool = True,
+                  use_kernel: bool = True):
     if use_kernel:
         return pmf_conv_pallas(pet, pct, dl, interpret=interpret)
     return pmf_conv_ref(pet, pct, dl)
+
+
+def pmf_conv(pet, pct, dl, interpret: bool = True, use_kernel: bool = True):
+    """(out, success) for a batch of PEND_DROP convolutions.
+
+    Launches route through ``repro.obs.profiling`` — a zero-cost
+    passthrough unless a ``KernelProfiler`` is installed, which then
+    splits dispatch (trace/compile) from execute (``block_until_ready``)
+    per launch."""
+    return profiled("pmf_conv", _pmf_conv_jit, pet, pct, dl,
+                    interpret=interpret, use_kernel=use_kernel)
 
 
 def pack_pmfs(pmfs, length: int) -> tuple[np.ndarray, np.ndarray]:

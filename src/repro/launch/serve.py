@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import jax
 import numpy as np
@@ -37,10 +38,12 @@ from ..configs.registry import get_arch
 from ..core.fleet import FleetSpec
 from ..core.pruning import PruningConfig
 from ..models import transformer as T
+from ..obs import (Telemetry, write_chrome_trace, write_jsonl,
+                   write_metrics)
 from ..serving.autoscale import SCALER_POLICIES, ElasticityConfig
 from ..serving.cluster import (ROUTER_POLICIES, Router,
                                make_engine_plane_factory, make_engine_planes)
-from ..serving.engine import EngineConfig, Request
+from ..serving.engine import TICKS_PER_SEC, EngineConfig, Request
 
 
 def synth_trace(n: int, vocab: int, n_prompts: int = 8, rate: float = 0.2,
@@ -88,6 +91,14 @@ def main():
     ap.add_argument("--extra-planes", type=int, default=0,
                     help="plane-pool headroom for router autoscaling "
                          "(0 disables)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON (Perfetto-"
+                         "viewable: one track per machine/plane) here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a metrics snapshot here (.prom/.txt gets "
+                         "Prometheus text, anything else JSON)")
+    ap.add_argument("--events-out", default=None,
+                    help="write the raw telemetry event log as JSONL here")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced().scaled(n_layers=2, remat=False)
@@ -111,13 +122,38 @@ def main():
                                      cooldown=100.0)
         plane_factory = make_engine_plane_factory(
             cfg, params, ecfg, warm_fns=planes[0].sub.warm_fns)
+    # telemetry rides on every run: the engine's tick clock stamps ``t``
+    # and perf_counter stamps ``wall`` (the tick+wall clock pair)
+    tel = Telemetry(wall_clock=time.perf_counter)
     router = Router(planes, policy=args.router, autoscale=autoscale,
-                    plane_factory=plane_factory)
+                    plane_factory=plane_factory, telemetry=tel)
     trace = synth_trace(args.requests, cfg.vocab, rate=args.rate,
                         deadline=args.deadline)
     stats = router.run(trace)
     if fleet is not None:
         stats["fleet"] = fleet.serialize()
+    # stable consolidated summary (legacy top-level keys kept for one
+    # release — see tests/test_cli.py back-compat assertions)
+    stats["telemetry"] = {
+        "schema": 1,
+        "counters": {k: stats.get(k, 0) for k in (
+            "completed", "on_time", "missed", "dropped", "merges",
+            "merge_rejected", "deferred", "cache_hits", "deadlock_breaks",
+            "scale_ups", "scale_downs")},
+        "wall": {"mapping_wall_s": stats.get("mapping_wall_s", 0.0),
+                 "pruning_wall_s": stats.get("pruning_wall_s", 0.0)},
+        "metrics": tel.metrics.snapshot(),
+    }
+    if args.trace_out:
+        write_chrome_trace(tel.events, args.trace_out,
+                           us_per_unit=1e6 / TICKS_PER_SEC)
+        stats["telemetry"]["trace_out"] = args.trace_out
+    if args.metrics_out:
+        write_metrics(tel.metrics, args.metrics_out)
+        stats["telemetry"]["metrics_out"] = args.metrics_out
+    if args.events_out:
+        write_jsonl(tel.events, args.events_out)
+        stats["telemetry"]["events_out"] = args.events_out
     print(json.dumps(stats, indent=2))
 
 

@@ -1,0 +1,20 @@
+"""Observability layer: telemetry recorder, metrics, exporters, profiling.
+
+See DESIGN.md §2.9.  Import surface is dependency-free (stdlib only) so the
+pure-numpy simulation path can enable telemetry without JAX present.
+"""
+
+from .metrics import MetricsRegistry, NullMetrics, StreamingHistogram
+from .telemetry import NULL, NullTelemetry, Telemetry
+from .exporters import (chrome_trace, write_chrome_trace, write_jsonl,
+                        write_metrics)
+from .profiling import KernelProfiler, install, profiled
+from .schema import validate_chrome_trace, validate_metrics_snapshot
+
+__all__ = [
+    "MetricsRegistry", "NullMetrics", "StreamingHistogram",
+    "NULL", "NullTelemetry", "Telemetry",
+    "chrome_trace", "write_chrome_trace", "write_jsonl", "write_metrics",
+    "KernelProfiler", "install", "profiled",
+    "validate_chrome_trace", "validate_metrics_snapshot",
+]

@@ -1,0 +1,117 @@
+"""Schema checks for exported artifacts (used by tests and the CI smoke).
+
+Hand-rolled validators (the container has no ``jsonschema``): each raises
+``ValueError`` with a path-qualified message on the first violation.
+
+CLI::
+
+    python -m repro.obs.schema trace.json [metrics.json]
+
+exits non-zero on the first invalid artifact — the bench-smoke CI job runs
+this over the emitted Perfetto trace and metrics snapshot.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+__all__ = ["validate_chrome_trace", "validate_metrics_snapshot"]
+
+_PHASES = {"X", "B", "E", "b", "e", "n", "i", "I", "M", "C"}
+_HIST_KEYS = {"count", "mean", "min", "max", "p50", "p95", "p99"}
+
+
+def _fail(path: str, msg: str):
+    raise ValueError(f"{path}: {msg}")
+
+
+def validate_chrome_trace(obj) -> None:
+    """Chrome trace-event JSON (object form with ``traceEvents``)."""
+    if not isinstance(obj, dict):
+        _fail("$", "trace must be a JSON object")
+    evs = obj.get("traceEvents")
+    if not isinstance(evs, list):
+        _fail("$.traceEvents", "missing or not a list")
+    for i, ev in enumerate(evs):
+        p = f"$.traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            _fail(p, "event must be an object")
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            _fail(p + ".ph", f"unknown phase {ph!r}")
+        if not isinstance(ev.get("name"), str):
+            _fail(p + ".name", "missing or not a string")
+        if not isinstance(ev.get("pid"), int):
+            _fail(p + ".pid", "missing or not an int")
+        if ph != "M":
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)):
+                _fail(p + ".ts", "missing or not a number")
+            if ts < 0:
+                _fail(p + ".ts", "negative timestamp")
+            if not isinstance(ev.get("tid"), int):
+                _fail(p + ".tid", "missing or not an int")
+        if ph == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                _fail(p + ".dur", "complete event needs dur >= 0")
+        if ph in ("b", "e", "n") and "id" not in ev:
+            _fail(p + ".id", "async event needs an id")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            _fail(p + ".args", "args must be an object")
+
+
+def validate_metrics_snapshot(obj) -> None:
+    """Output of ``MetricsRegistry.snapshot()``."""
+    if not isinstance(obj, dict):
+        _fail("$", "snapshot must be a JSON object")
+    for sect in ("counters", "gauges", "histograms"):
+        if sect not in obj or not isinstance(obj[sect], dict):
+            _fail(f"$.{sect}", "missing or not an object")
+    for name, v in obj["counters"].items():
+        if not isinstance(v, (int, float)):
+            _fail(f"$.counters[{name!r}]", "value must be a number")
+    for name, v in obj["gauges"].items():
+        if not isinstance(v, (int, float)):
+            _fail(f"$.gauges[{name!r}]", "value must be a number")
+    for name, h in obj["histograms"].items():
+        p = f"$.histograms[{name!r}]"
+        if not isinstance(h, dict):
+            _fail(p, "summary must be an object")
+        missing = _HIST_KEYS - set(h)
+        if missing:
+            _fail(p, f"missing keys {sorted(missing)}")
+        for k in _HIST_KEYS:
+            if not isinstance(h[k], (int, float)):
+                _fail(f"{p}.{k}", "must be a number")
+        if h["count"] < 0:
+            _fail(f"{p}.count", "negative count")
+
+
+def _validate_file(path: str) -> str:
+    with open(path) as fh:
+        obj = json.load(fh)
+    if isinstance(obj, dict) and "traceEvents" in obj:
+        validate_chrome_trace(obj)
+        return "chrome-trace"
+    validate_metrics_snapshot(obj)
+    return "metrics-snapshot"
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        print("usage: python -m repro.obs.schema FILE [FILE ...]")
+        return 2
+    for path in argv:
+        try:
+            kind = _validate_file(path)
+        except (ValueError, OSError, json.JSONDecodeError) as e:
+            print(f"INVALID {path}: {e}")
+            return 1
+        print(f"ok {path} ({kind})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,6 +19,7 @@ from typing import Protocol
 from .config import ElasticityConfig
 from .policies import make_scaler_policy
 from .signals import ScaleSignals, substrate_signals
+from ...obs.telemetry import NULL
 
 __all__ = ["MachinePool", "PoolScaler"]
 
@@ -54,6 +55,10 @@ class PoolScaler:
                       "extra_pool_cost": 0.0, "warmup_ticks": 0.0}
         self._last = 0.0
         self._cooldown_until = 0.0
+        #: telemetry recorder + the pool level it reports as ("units",
+        #: "machines", "planes"); pure recording, never read back
+        self.tel = NULL
+        self.scope = "units"
         #: the base pool's summed cost rate, captured before any scaling:
         #: spend above it is what the cost budgets gate
         self._base_rate = self._pool_rate()
@@ -116,11 +121,17 @@ class PoolScaler:
                 self.stats["scale_ups"] += 1
                 self.stats["warmup_ticks"] += charge
                 self._cooldown_until = now + self.cfg.cooldown
+                self.tel.event(now, "scale_up", scope=self.scope,
+                               size=self.pool.size(), warmup=charge)
+                self.tel.metrics.inc("scale_ups", scope=self.scope)
                 return 1
         elif act < 0 and self.pool.size() > self.base:
             if self.pool.shrink(now):
                 self.stats["scale_downs"] += 1
                 self._cooldown_until = now + self.cfg.cooldown
+                self.tel.event(now, "scale_down", scope=self.scope,
+                               size=self.pool.size())
+                self.tel.metrics.inc("scale_downs", scope=self.scope)
                 return -1
         return 0
 

@@ -42,6 +42,7 @@ import numpy as np
 from ..core.oversubscription import oversubscription_level
 from ..core.simulation import Simulator
 from ..core.tasks import Task
+from ..obs.telemetry import NULL
 from .autoscale import (ElasticityConfig, PoolScaler, ScaleSignals,
                         batch_chances)
 
@@ -330,11 +331,17 @@ class Router:
 
     def __init__(self, planes, policy="least-loaded", shared_detector=True,
                  autoscale: ElasticityConfig | None = None,
-                 plane_factory=None):
+                 plane_factory=None, telemetry=None):
         self.planes = [p if isinstance(p, Plane) else Plane(p, pid=i)
                        for i, p in enumerate(planes)]
         if len({p.pid for p in self.planes}) != len(self.planes):
             raise ValueError("plane ids must be unique")
+        #: one obs.Telemetry shared by the router and every plane, so the
+        #: cluster's whole timeline lands in a single exportable stream
+        self.tel = telemetry if telemetry is not None else NULL
+        if self.tel.enabled:
+            for p in self.planes:
+                self._attach_plane_telemetry(p)
         self.policy = (policy if isinstance(policy, RouterPolicy)
                        else make_router_policy(policy))
         self.shared = CrossPlaneLookup(self.planes) if shared_detector \
@@ -356,6 +363,20 @@ class Router:
                                  "plane_factory(pid) -> substrate | Plane")
             self.plane_scaler = PoolScaler(
                 autoscale, _PlanePool(self, plane_factory), len(self.planes))
+            if self.tel.enabled:
+                self.plane_scaler.tel = self.tel
+                self.plane_scaler.scope = "planes"
+
+    def _attach_plane_telemetry(self, plane: Plane) -> None:
+        """Wire the router's recorder through one plane — via the
+        substrate's own ``attach_telemetry`` (engine/simulator) when it has
+        one, else directly onto its control plane."""
+        attach = getattr(plane.sub, "attach_telemetry", None)
+        if attach is not None:
+            attach(self.tel, plane=plane.pid)
+        else:
+            plane.cp.tel = self.tel
+            plane.cp.plane_id = plane.pid
 
     # -- streaming session API ------------------------------------------------
     def submit(self, item, t: float) -> Plane:
@@ -376,6 +397,8 @@ class Router:
             if reason == "affinity:prefix":
                 self.stats["prefix_affinity"] += 1
         self.decisions.append((round(t, 6), plane.pid, reason))
+        self.tel.event(t, "route", plane=plane.pid, reason=reason)
+        self.tel.metrics.inc("routed", plane=str(plane.pid))
         return plane
 
     def step(self, until: float) -> None:
@@ -477,6 +500,11 @@ class Router:
                 "plane_cost": sc["pool_cost"],
                 "extra_plane_cost": sc["extra_pool_cost"],
             }
+        if self.tel.enabled:
+            # router-level aggregation: one metrics snapshot over every
+            # plane (they all share the router's recorder)
+            agg["telemetry"] = {"metrics": self.tel.metrics.snapshot(),
+                                "events": len(self.tel.events)}
         return agg
 
 
@@ -532,6 +560,8 @@ class _PlanePool:
                              f"got {plane.pid}")
         r.planes.append(plane)
         r.stats["routed"].setdefault(plane.pid, 0)
+        if r.tel.enabled:
+            r._attach_plane_telemetry(plane)
         return 0.0
 
     def shrink(self, now: float) -> bool:

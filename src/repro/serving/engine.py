@@ -368,9 +368,11 @@ class ServingEngine(Substrate):
                       "warmup_ticks": 0.0, "executions": 0,
                       "mapping_events": 0, "deferred": 0,
                       "deadlock_breaks": 0, "mapping_wall_s": 0.0,
+                      "pruning_wall_s": 0.0,
                       "prefix_hits": 0, "prefix_candidates": 0,
                       "prefix_tokens_reused": 0,
                       "prefill_tokens": 0}  # prefix_* mirrored from kvcache
+        self._tel = None                    # obs.Telemetry once attached
         self.cp = ControlPlane(self, cfg.control())
         #: per-unit paged KV caches, mid -> PrefixKVCache (DESIGN.md §2.4 /
         #: §2.8): each compiled unit owns its blocks, so the mapping layer's
@@ -476,9 +478,14 @@ class ServingEngine(Substrate):
         else:
             self.stats["warm_starts"] += 1
         if self._kv_enabled and unit.kind != "stub":
-            self.kvcaches[unit.machine.mid] = PrefixKVCache(
+            cache = PrefixKVCache(
                 self.cfg.kv_cache_blocks, self.cfg.kv_block_size,
                 value_fn=self._block_value, clock_fn=lambda: self.clock)
+            if self._tel is not None:
+                cache.tel = self._tel
+                cache.tel_attrs = {"plane": self.cp.plane_id,
+                                   "machine": unit.machine.mid}
+            self.kvcaches[unit.machine.mid] = cache
         # initial units are pre-warmed before traffic opens (the thesis's
         # SMSE starts its processing units ahead of the stream); cold/warm
         # start-up charges virtual time only for mid-run elastic scale-ups
@@ -494,6 +501,46 @@ class ServingEngine(Substrate):
             self.scaler.step_substrate(now, self.cp, self.machines,
                                        self.oracle)
 
+    # -- observability ---------------------------------------------------------
+    def attach_telemetry(self, tel, plane: int | None = None) -> None:
+        """Wire one ``repro.obs.Telemetry`` through every layer of this
+        engine: lifecycle events from the control plane, hit/miss/evict
+        events from the per-unit KV caches (including units added later by
+        the scaler), scale events from the autoscaler.  Recording only —
+        no decision path reads the recorder."""
+        self._tel = tel
+        if plane is not None:
+            self.cp.plane_id = plane
+        self.cp.tel = tel
+        for mid, cache in self.kvcaches.items():
+            cache.tel = tel
+            cache.tel_attrs = {"plane": self.cp.plane_id, "machine": mid}
+        if self.scaler is not None:
+            self.scaler.tel = tel
+            self.scaler.scope = "units"
+
+    # -- QoS accounting (one path for every completion/drop) -------------------
+    def _account_completed(self, req: Request, now: float,
+                           ttype: str | None = None) -> int:
+        """Single completion-accounting path, shared by result-cache hits
+        and real executions; returns 1 when the request missed its
+        deadline (the pruner-EWMA signal)."""
+        req.status = "done"
+        req.completed_at = now
+        self.stats["completed"] += 1
+        if now <= req.deadline:
+            self.stats["on_time"] += 1
+            if ttype is not None and self.pruner is not None:
+                self.pruner.fairness.note_served(ttype)
+            return 0
+        self.stats["missed"] += 1
+        return 1
+
+    def _account_dropped(self, req: Request, now: float) -> None:
+        req.status = "dropped"
+        req.completed_at = now
+        self.stats["dropped"] += 1
+
     # -- ingestion (Ch. 4 front door) ----------------------------------------
     def ingest(self, req: Request, now: float) -> Task | None:
         req.rid = self._rid
@@ -501,11 +548,10 @@ class ServingEngine(Substrate):
         sig = (req.prompt, req.op, req.params_sig)
         if self.cfg.result_cache and req.op == "generate" and sig in self.cache:
             req.tokens = list(self.cache[sig])
-            req.status = "done"
-            req.completed_at = now
             self.stats["cache_hits"] += 1
-            self.stats["completed"] += 1
-            self.stats["on_time"] += 1 if now <= req.deadline else 0
+            # same accounting path as a real execution: a hit served past
+            # its deadline counts as missed (simulator semantics)
+            self._account_completed(req, now)
             return None
 
         task = req.to_task(now, req.rid)
@@ -623,16 +669,7 @@ class ServingEngine(Substrate):
                      and not getattr(task, "_stub_backend", False))
         missed = 0
         for r in reqs:
-            r.status = "done"
-            r.completed_at = now
-            self.stats["completed"] += 1
-            if now <= r.deadline:
-                self.stats["on_time"] += 1
-                if self.pruner is not None:
-                    self.pruner.fairness.note_served(task.ttype)
-            else:
-                self.stats["missed"] += 1
-                missed += 1
+            missed += self._account_completed(r, now, ttype=task.ttype)
             if cacheable and r.op == "generate":
                 self.cache[(r.prompt, r.op, r.params_sig)] = list(r.tokens)
         return missed
@@ -648,9 +685,7 @@ class ServingEngine(Substrate):
         # only tasks that *ran* late, so miss-rate consumers combine
         # missed + dropped — exactly like SimStats.miss_rate
         for r in reqs:
-            r.status = "dropped"
-            r.completed_at = now
-            self.stats["dropped"] += 1
+            self._account_dropped(r, now)
 
     # -- driving ---------------------------------------------------------------
     def run(self, requests: list[tuple[float, Request]]) -> dict:
@@ -676,6 +711,7 @@ class ServingEngine(Substrate):
         self.stats["deferred"] = c["deferred"]
         self.stats["deadlock_breaks"] = c["deadlock_breaks"]
         self.stats["mapping_wall_s"] = c["mapping_wall_s"]
+        self.stats["pruning_wall_s"] = c["pruning_wall_s"]
         if self.scaler is not None:
             self.scaler.sync(self.cp.now)
             self.stats.update({k: self.scaler.stats[k] for k in (

@@ -58,6 +58,11 @@ class PrefixKVCache:
         self._clock_fn = clock_fn or (lambda: 0.0)
         self.stats = {"lookups": 0, "hits": 0, "misses": 0, "inserts": 0,
                       "evictions": 0, "tokens_reused": 0, "rejected": 0}
+        #: optional repro.obs Telemetry recorder + attrs stamped on every
+        #: event (owner sets e.g. {"plane": 0, "machine": 3}); pure
+        #: recording — nothing here is read back by cache decisions
+        self.tel = None
+        self.tel_attrs: dict = {}
 
     @property
     def block_size(self) -> int:
@@ -77,6 +82,10 @@ class PrefixKVCache:
         self.stats["lookups"] += 1
         if not nodes:
             self.stats["misses"] += 1
+            if self.tel is not None:
+                self.tel.event(now, "kv_lookup", hit=False, blocks=0,
+                               tokens=0, **self.tel_attrs)
+                self.tel.metrics.inc("kv_misses")
             return CacheHit(0)
         for n in nodes:
             self.pool.incref(n.block)
@@ -85,6 +94,11 @@ class PrefixKVCache:
         n_tok = len(nodes) * self.block_size
         self.stats["hits"] += 1
         self.stats["tokens_reused"] += n_tok
+        if self.tel is not None:
+            self.tel.event(now, "kv_lookup", hit=True, blocks=len(nodes),
+                           tokens=n_tok, **self.tel_attrs)
+            self.tel.metrics.inc("kv_hits")
+            self.tel.metrics.inc("kv_tokens_reused", n_tok)
         return CacheHit(n_tok, nodes)
 
     def release(self, hit: CacheHit) -> None:
@@ -132,6 +146,9 @@ class PrefixKVCache:
             for blk in pinned:
                 self.pool.decref(blk)
         self.stats["inserts"] += added
+        if self.tel is not None and added:
+            self.tel.event(now, "kv_insert", blocks=added, **self.tel_attrs)
+            self.tel.metrics.inc("kv_blocks_inserted", added)
         return added
 
     # -- eviction -------------------------------------------------------------
@@ -156,6 +173,10 @@ class PrefixKVCache:
             self.index.remove(victim)
             self.pool.free(victim.block)
             self.stats["evictions"] += 1
+            if self.tel is not None:
+                self.tel.event(now, "kv_evict", blocks=1,
+                               depth=victim.block.depth, **self.tel_attrs)
+                self.tel.metrics.inc("kv_evictions")
             freed += 1
         return True
 

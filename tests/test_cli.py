@@ -1,10 +1,12 @@
 """Subprocess smokes for the public CLIs (train / serve / dryrun --help)."""
 
+import json
 import os
 import subprocess
 import sys
 
 SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
 ENV = dict(os.environ, PYTHONPATH=SRC)
 
 
@@ -58,6 +60,73 @@ def test_serve_cli_multiplane():
     # per-plane stats + routing counters ride in the JSON summary
     assert '"planes"' in out and '"router"' in out
     assert '"deadlock_breaks"' in out
+
+
+def test_serve_cli_telemetry_out(tmp_path):
+    """--trace-out/--metrics-out/--events-out artifacts validate, and the
+    JSON summary carries the consolidated ``telemetry`` key while the
+    legacy top-level counters stay (back-compat, kept for one release)."""
+    from repro.obs import validate_chrome_trace, validate_metrics_snapshot
+
+    trace = tmp_path / "trace.json"
+    metrics = tmp_path / "metrics.json"
+    events = tmp_path / "events.jsonl"
+    out = _run(["repro.launch.serve", "--requests", "10", "--units", "1",
+                "--merging", "adaptive", "--pruning", "--rate", "0.5",
+                "--trace-out", str(trace), "--metrics-out", str(metrics),
+                "--events-out", str(events)])
+    stats = json.loads(out)
+    tel = stats["telemetry"]
+    assert tel["schema"] == 1
+    # every consolidated counter mirrors its legacy top-level twin
+    for k, v in tel["counters"].items():
+        assert stats.get(k, 0) == v, k
+    assert tel["wall"]["mapping_wall_s"] == stats["mapping_wall_s"]
+    assert tel["wall"]["pruning_wall_s"] == stats["pruning_wall_s"]
+    validate_metrics_snapshot(tel["metrics"])
+    # the emitted artifacts exist and pass the schema checks
+    validate_chrome_trace(json.loads(trace.read_text()))
+    validate_metrics_snapshot(json.loads(metrics.read_text()))
+    ev = [json.loads(line) for line in events.read_text().splitlines()]
+    assert ev and all("t" in e and "kind" in e for e in ev)
+
+
+def test_serve_smse_example_trace_out(tmp_path):
+    """Acceptance run: one serve_smse invocation with --trace-out yields a
+    Perfetto-loadable Chrome trace (one track per machine, lifecycle spans,
+    drop/defer attribution) and a quantile-bearing metrics snapshot."""
+    from repro.obs import validate_chrome_trace, validate_metrics_snapshot
+
+    trace_p = tmp_path / "trace.json"
+    metrics_p = tmp_path / "metrics.json"
+    script = os.path.join(ROOT, "examples", "serve_smse.py")
+    out = subprocess.run(
+        [sys.executable, script, "--requests", "16", "--planes", "1",
+         "--trace-out", str(trace_p), "--metrics-out", str(metrics_p)],
+        capture_output=True, text=True, env=ENV, timeout=900, cwd=ROOT)
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-1500:])
+
+    trace = json.loads(trace_p.read_text())
+    validate_chrome_trace(trace)
+    evs = trace["traceEvents"]
+    machine_tracks = {e["args"]["name"] for e in evs
+                      if e["ph"] == "M" and e["name"] == "thread_name"
+                      and e["args"]["name"].startswith("machine")}
+    assert machine_tracks                       # one track per machine used
+    assert [e for e in evs if e["ph"] == "X"]   # execution spans
+    opens = sorted(e["id"] for e in evs if e["ph"] == "b")
+    closes = sorted(e["id"] for e in evs if e["ph"] == "e")
+    assert opens and opens == closes            # every lifecycle span closes
+
+    snap = json.loads(metrics_p.read_text())
+    validate_metrics_snapshot(snap)
+    for name in ("latency", "queue_wait", "slack"):
+        h = snap["histograms"][name]
+        assert h["count"] > 0
+        assert h["p50"] <= h["p95"] <= h["p99"]
+    assert snap["gauges"]["pruning_wall_s"] >= 0.0
+    if snap["counters"].get("merges{level=\"task\"}", 0):
+        assert snap["histograms"]["merge_saving"]["count"] > 0
 
 
 def test_dryrun_cli_tiny_decode():
