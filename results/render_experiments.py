@@ -211,6 +211,44 @@ def qos_attribution_table(path="../BENCH_serving.json"):
     return "\n".join(out)
 
 
+def continuous_batching_table(path="../BENCH_serving.json"):
+    """Continuous batching: tokens/sec per unit, sequential vs batched,
+    plus the p95 decode-latency row under a concurrent 4k prefill
+    (DESIGN.md §2.10; benchmarks/serving.py::continuous_batching)."""
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return "(run `python -m benchmarks.run --only serving` first)"
+    rows = json.load(open(p)).get("batching_rows", [])
+    if not rows:
+        return "(re-run `python -m benchmarks.run --only serving`: " \
+               "no batching_rows in BENCH_serving.json)"
+    tput = [r for r in rows if r["mode"] in ("sequential", "batched")]
+    by_conc: dict = {}
+    for r in tput:
+        by_conc.setdefault(r["concurrency"], {})[r["mode"]] = r
+    head = ["concurrency", "tokens", "seq tok/s/unit", "batched tok/s/unit",
+            "speedup", "max_batch", "budget"]
+    out = ["| " + " | ".join(head) + " |", "|" + "---|" * len(head)]
+    for conc in sorted(by_conc):
+        s, b = by_conc[conc].get("sequential"), by_conc[conc].get("batched")
+        if not (s and b):
+            continue
+        out.append("| " + " | ".join(str(c) for c in (
+            conc, b["tokens"], f"{s['tokens_per_sec_per_unit']:.0f}",
+            f"{b['tokens_per_sec_per_unit']:.0f}",
+            f"{b['tokens_per_sec_per_unit'] / max(s['tokens_per_sec_per_unit'], 1e-9):.2f}x",
+            b["max_batch"], b["step_token_budget"])) + " |")
+    for r in rows:
+        if r["mode"] == "decode_latency":
+            out.append(
+                f"\np95 decode step: {r['p95_decode_ticks_idle']:.2f} ticks "
+                f"idle → {r['p95_decode_ticks_with_4k_prefill']:.2f} under a "
+                f"concurrent {r['prefill_tokens']}-token prefill "
+                f"({r['latency_ratio']}x; run-to-completion would stall "
+                f"{r['serial_hol_stall_ticks']:.0f} ticks)")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     cur = load("dryrun.jsonl")
     base = load("dryrun_baseline.jsonl")
@@ -239,3 +277,6 @@ if __name__ == "__main__":
     print("\n## §QoS attribution — drop/defer reasons x policy "
           "(from the telemetry stream)\n")
     print(qos_attribution_table())
+    print("\n## §Continuous batching — tokens/sec per unit + p95 decode "
+          "latency under chunked prefill\n")
+    print(continuous_batching_table())

@@ -107,6 +107,25 @@ class Substrate:
     def on_merge(self, existing: Task, arriving: Task, level) -> None:
         """Bookkeeping after ``arriving`` merged into ``existing``."""
 
+    # -- step-level batching hooks (machines with ``max_batch > 1``) ---------
+    def join_batch(self, task: Task, machine: Machine, now: float) -> None:
+        """Admit ``task``'s sequences into the machine's step batch; they
+        start executing at the next scheduling quantum."""
+        raise NotImplementedError
+
+    def run_quantum(self, machine: Machine, now: float):
+        """Advance the machine's step batch from ``now`` (at most
+        ``quantum_steps`` steps, stopping at the first completion).
+        Returns ``(t_end, completed_tasks)`` — completions take effect at
+        ``t_end`` — or ``(None, [])`` when the batch is empty."""
+        raise NotImplementedError
+
+    def evict_from_batch(self, task: Task, machine: Machine,
+                         now: float) -> None:
+        """Drop ``task``'s sequences from the in-flight batch (pruner
+        EVICT); already-costed quantum steps stand."""
+        raise NotImplementedError
+
 
 # ---------------------------------------------------------------------------
 # the control plane
@@ -147,6 +166,7 @@ class ControlPlane:
         self._events: list = []
         self._seq = itertools.count()
         self._epoch: dict[int, int] = {}
+        self._quantum_done: dict[int, list] = {}
         self._misses_since_event = 0
         self._arrival_index: dict[int, int] = {}
         self._n_arrivals = 0
@@ -407,7 +427,9 @@ class ControlPlane:
         self.tel.metrics.gauge("pruning_wall_s", self.stats["pruning_wall_s"])
         # start idle machines (execution time is the substrate's, not ours)
         for m in machines:
-            if m.running is None and m.queue:
+            if m.max_batch > 1:
+                self._start_batched(m)
+            elif m.running is None and m.queue:
                 self._start_next(m)
         if self.after_mapping is not None:
             self.after_mapping(self)
@@ -423,9 +445,17 @@ class ControlPlane:
 
     def _evict_if_running(self, task: Task, machines: list[Machine]) -> None:
         """EVICT-mode drops can name an executing task: free its machine and
-        invalidate the in-flight finish event via the epoch counter."""
+        invalidate the in-flight finish event via the epoch counter.  On a
+        batched machine only the task's own sequences are dropped — the
+        quantum (and its finish event) stands for the co-runners, and the
+        steps already walked for the evicted task are honestly sunk cost."""
         for m in machines:
-            if m.running is task:
+            if m.max_batch > 1:
+                if task in m.active:
+                    m.active.remove(task)
+                    self.sub.evict_from_batch(task, m, self.now)
+                    m.running = m.active[0] if m.active else None
+            elif m.running is task:
                 m.running = None
                 m.run_end = m.busy_until = self.now
                 self._epoch[m.mid] = self._epoch.get(m.mid, 0) + 1
@@ -463,43 +493,19 @@ class ControlPlane:
         self.batch = []
 
     # -- machine execution ----------------------------------------------------
-    def _start_next(self, m: Machine) -> None:
-        if m.running is not None or m.busy_until > self.now:
-            return
-        while m.queue:
-            task = m.queue.pop(0)
-            if self.cfg.hard_deadlines and task.effective_deadline <= self.now:
-                self._drop(task, reason="expired_at_start")
-                continue
-            dur = self.sub.begin_execution(task, m, self.now)
-            task.status = "running"
-            task._exec_start = self.now
-            m.running = task
-            m.run_end = m.busy_until = self.now + dur
-            self._epoch[m.mid] = self._epoch.get(m.mid, 0) + 1
-            self._push(m.run_end, "finish", (m.mid, self._epoch[m.mid]))
-            self._log("start", self._index(task),
-                      self.sub.machines.index(m), round(self.now, 6))
-            if self.tel.enabled:
-                reqs = task.all_requests()
-                self.tel.event(self.now, "exec_start",
-                               task=self._index(task), machine=m.mid,
-                               plane=self.plane_id, n_requests=len(reqs),
-                               wait=round(self.now - task.arrival, 9))
-                for r in reqs:
-                    self.tel.metrics.observe("queue_wait",
-                                             self.now - r.arrival)
-            return
+    def _tel_start(self, task: Task, m: Machine) -> None:
+        self._log("start", self._index(task), self.sub.machines.index(m),
+                  round(self.now, 6))
+        if self.tel.enabled:
+            reqs = task.all_requests()
+            self.tel.event(self.now, "exec_start",
+                           task=self._index(task), machine=m.mid,
+                           plane=self.plane_id, n_requests=len(reqs),
+                           wait=round(self.now - task.arrival, 9))
+            for r in reqs:
+                self.tel.metrics.observe("queue_wait", self.now - r.arrival)
 
-    def _handle_finish(self, m: Machine) -> None:
-        task = m.running
-        m.running = None
-        if task is None:
-            return
-        missed = self.sub.finish_execution(task, m, self.now)
-        self._misses_since_event += missed
-        self.stats["last_completion"] = max(self.stats["last_completion"],
-                                            self.now)
+    def _tel_finish(self, task: Task, m: Machine, missed: int) -> None:
         self._log("finish", self._index(task), round(self.now, 6), missed)
         if self.tel.enabled:
             reqs = task.all_requests()
@@ -530,4 +536,93 @@ class ControlPlane:
                                task=self._index(task), fanout=len(reqs),
                                saving=round(saving, 9), plane=self.plane_id)
                 self.tel.metrics.observe("merge_saving", saving)
+
+    def _start_next(self, m: Machine) -> None:
+        if m.running is not None or m.busy_until > self.now:
+            return
+        while m.queue:
+            task = m.queue.pop(0)
+            if self.cfg.hard_deadlines and task.effective_deadline <= self.now:
+                self._drop(task, reason="expired_at_start")
+                continue
+            dur = self.sub.begin_execution(task, m, self.now)
+            task.status = "running"
+            task._exec_start = self.now
+            m.running = task
+            m.run_end = m.busy_until = self.now + dur
+            self._epoch[m.mid] = self._epoch.get(m.mid, 0) + 1
+            self._push(m.run_end, "finish", (m.mid, self._epoch[m.mid]))
+            self._tel_start(task, m)
+            return
+
+    def _handle_finish(self, m: Machine) -> None:
+        if m.max_batch > 1:
+            self._finish_batched(m)
+            return
+        task = m.running
+        m.running = None
+        if task is None:
+            return
+        missed = self.sub.finish_execution(task, m, self.now)
+        self._misses_since_event += missed
+        self.stats["last_completion"] = max(self.stats["last_completion"],
+                                            self.now)
+        self._tel_finish(task, m, missed)
         self._start_next(m)
+
+    # -- step-level batching (machines with ``max_batch > 1``) ---------------
+    def _start_batched(self, m: Machine) -> None:
+        """Admit queued tasks into the machine's step batch and schedule the
+        next quantum.  Admissions only take effect at quantum boundaries —
+        mid-quantum (``busy_until > now``) the walker has already costed
+        the in-flight steps, so joiners wait at most one quantum."""
+        if m.busy_until > self.now or m.mid in self._quantum_done:
+            # second clause: the quantum ends exactly *now* but its finish
+            # event has not popped yet — starting another would clobber the
+            # stashed completions and orphan their tasks
+            return
+        if m.running is not None and m.running.is_placeholder:
+            return
+        while m.queue and len(m.active) < m.max_batch:
+            task = m.queue.pop(0)
+            if self.cfg.hard_deadlines and task.effective_deadline <= self.now:
+                self._drop(task, reason="expired_at_start")
+                continue
+            self.sub.join_batch(task, m, self.now)
+            task.status = "running"
+            task._exec_start = self.now
+            m.active.append(task)
+            self._tel_start(task, m)
+        if m.active:
+            self._schedule_quantum(m)
+        else:
+            m.running = None
+            m.run_end = m.busy_until = self.now
+
+    def _schedule_quantum(self, m: Machine) -> None:
+        t_end, completed = self.sub.run_quantum(m, self.now)
+        if t_end is None:
+            m.running = None
+            m.run_end = m.busy_until = self.now
+            return
+        self._quantum_done[m.mid] = completed
+        m.running = m.active[0] if m.active else None
+        m.run_end = m.busy_until = t_end
+        self._epoch[m.mid] = self._epoch.get(m.mid, 0) + 1
+        self._push(t_end, "finish", (m.mid, self._epoch[m.mid]))
+
+    def _finish_batched(self, m: Machine) -> None:
+        """A quantum boundary: account the completions the walker reported
+        for this instant; the trailing mapping event re-admits and starts
+        the next quantum (``_start_batched`` via the start loop)."""
+        m.busy_until = self.now
+        for task in self._quantum_done.pop(m.mid, []):
+            if task.status == "dropped" or task not in m.active:
+                continue  # evicted mid-quantum; already accounted
+            m.active.remove(task)
+            missed = self.sub.finish_execution(task, m, self.now)
+            self._misses_since_event += missed
+            self.stats["last_completion"] = max(
+                self.stats["last_completion"], self.now)
+            self._tel_finish(task, m, missed)
+        m.running = m.active[0] if m.active else None

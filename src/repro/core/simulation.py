@@ -27,6 +27,7 @@ from .tasks import Machine, PETMatrix, Task
 
 if TYPE_CHECKING:   # core stays importable without the serving package
     from ..serving.autoscale import ElasticityConfig
+    from ..serving.batching import StepBatchingConfig
 
 __all__ = ["SimConfig", "SimStats", "Simulator", "PETOracle", "VideoOracle"]
 
@@ -142,6 +143,15 @@ class SimConfig:
     # cache (one pool-wide cache; the machine argument is a no-op), which
     # models a disaggregated KV store and preserves legacy sweeps exactly.
     kv_per_machine: bool = False
+    # step-level continuous batching (DESIGN.md §2.10): machines co-run up
+    # to ``batching.max_batch`` tasks through the shared ``UnitBatch`` step
+    # walker — each task's oracle-sampled duration is split into per-token
+    # prefill/decode rates and the fused-step cost model prices every step,
+    # so throughput becomes batch-size- and chunk-dependent exactly as in
+    # the engine's analytic stub.  None keeps the run-to-completion model.
+    # Analytic prefix reuse is bypassed under batching (the chunk walker
+    # owns the prefill accounting).
+    batching: "StepBatchingConfig | None" = None
 
     def control(self) -> ControlConfig:
         return ControlConfig(
@@ -245,6 +255,10 @@ class Simulator(Substrate):
         self.kvcache = None
         self.kvcaches: dict[int, object] = {}   # mid -> per-machine cache
         self._retired_evictions = 0             # from scaler-retired caches
+        self._batches: dict[int, object] = {}   # mid -> UnitBatch walker
+        if self.cfg.batching is not None and self.cfg.batching.max_batch > 1:
+            for m in self.machines:
+                m.max_batch = self.cfg.batching.max_batch
         if self.cfg.prefix_cache_blocks > 0:
             # lazy import: core stays importable without the serving package
             from ..serving.kvcache import CombinedPrefixIndex, PrefixKVCache
@@ -418,6 +432,59 @@ class Simulator(Substrate):
                 self._result_cache.add(r.key_task_level())
         return missed
 
+    # -- Substrate: step-level batching (DESIGN.md §2.10) ----------------------
+    def _unit_batch(self, m: Machine):
+        ub = self._batches.get(m.mid)
+        if ub is None:
+            # lazy import: core stays importable without the serving package
+            from ..serving.batching import UnitBatch
+
+            def on_step(t, dt, plan):
+                tel = self.cp.tel
+                if tel.enabled:
+                    tel.event(t, "batch_step", machine=m.mid,
+                              plane=self.cp.plane_id, dt=round(dt, 9),
+                              tokens=plan.tokens, decode=len(plan.decode),
+                              chunks=len(plan.chunks))
+                    tel.metrics.observe("step_ticks", dt)
+
+            ub = self._batches[m.mid] = UnitBatch(self.cfg.batching,
+                                                  on_step=on_step)
+        return ub
+
+    def join_batch(self, task: Task, m: Machine, now: float) -> None:
+        """Admit ``task`` into the machine's step batch: the oracle-sampled
+        run-to-completion duration is split into prefill/decode work and
+        converted to per-token rates the fused-step cost model prices.
+        Work (cost/energy) is charged as in ``begin_execution`` — batching
+        compresses wall-clock occupancy, not the work itself."""
+        from ..serving.batching import SeqState, task_dims
+        cfg = self.cfg.batching
+        dur = self.oracle.sample(task, m)
+        self.stats.busy_time += dur
+        self.stats.cost += dur * m.cost_rate
+        self.stats.energy += dur * m.power
+        plen, n_new = task_dims(task, cfg)
+        wp = dur * cfg.prefill_fraction
+        self._unit_batch(m).join(
+            SeqState(task=task, plen=plen, n_new=n_new,
+                     prefill_rate=wp / plen,
+                     decode_step=(dur - wp) / max(n_new, 1)), now)
+
+    def run_quantum(self, m: Machine, now: float):
+        ub = self._batches.get(m.mid)
+        if ub is None or ub.empty:
+            return None, []
+        t_end, completed = ub.run_quantum(now)
+        if t_end is None:
+            return None, []
+        return t_end, [s.task for s in completed]
+
+    def evict_from_batch(self, task: Task, m: Machine, now: float) -> None:
+        ub = self._batches.get(m.mid)
+        if ub is not None:
+            ub.evict(task)
+
     def on_drop(self, task: Task, now: float) -> None:
         for r in task.all_requests():
             r.status = "dropped"
@@ -457,6 +524,8 @@ class Simulator(Substrate):
         return dur - saved
 
     def _finish_prefix_reuse(self, task: Task, m: Machine) -> None:
+        if m.max_batch > 1:
+            return      # batching bypasses analytic prefix reuse (§2.10)
         cache = self._machine_cache(m)
         if cache is None or not task.tokens:
             return
@@ -497,6 +566,8 @@ class _SimMachinePool:
             m = Machine(mid=sim._extra_mid, mtype=proto.mtype,
                         speed=proto.speed, queue_size=proto.queue_size,
                         cost_rate=proto.cost_rate, power=proto.power)
+        if sim.cfg.batching is not None and sim.cfg.batching.max_batch > 1:
+            m.max_batch = sim.cfg.batching.max_batch
         sim.machines.append(m)
         if sim.cfg.kv_per_machine and sim.cfg.prefix_cache_blocks > 0:
             cache = sim._make_kvcache()
@@ -517,6 +588,7 @@ class _SimMachinePool:
             return False
         i = max(idle, key=lambda j: (machines[j].cost_rate, j))
         m = machines.pop(i)
+        sim._batches.pop(m.mid, None)
         cache = sim.kvcaches.pop(m.mid, None)
         if cache is not None:
             sim._retired_evictions += cache.stats["evictions"]

@@ -111,17 +111,25 @@ class Machine:
     queue_size: int = 4             # pending slots (excl. executing task)
     cost_rate: float = 1.0          # $ per time unit (Fig. 5.19 cost model)
     power: float = 1.0              # energy per time unit
+    max_batch: int = 1              # >1: step-level continuous batching —
+    # the control plane co-schedules up to this many tasks on the machine
+    # through the substrate's UnitBatch (DESIGN.md §2.10); ``running`` then
+    # mirrors the oldest active task and ``run_end``/``busy_until`` the end
+    # of the in-flight scheduling quantum
     # runtime state ----------------------------------------------------------
     queue: list[Task] = field(default_factory=list)
     running: Optional[Task] = None
     run_end: float = 0.0            # sampled ground-truth end of running task
     busy_until: float = 0.0
+    active: list[Task] = field(default_factory=list)  # batched-mode co-runners
 
     @property
     def free_slots(self) -> int:
         return max(0, self.queue_size - len(self.queue))
 
     def all_tasks(self) -> list[Task]:
+        if self.max_batch > 1:
+            return list(self.active) + list(self.queue)
         return ([self.running] if self.running else []) + list(self.queue)
 
 

@@ -22,3 +22,32 @@ def decode_attention_ref(q, k_cache, v_cache, lengths):
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """Oracle for the paged kernel: gather pages into a contiguous cache.
+
+    q (B, H, hd); k/v_pages (NP, PS, Hkv, hd); block_tables (B, MP);
+    lengths (B,) -> (B, H, hd).
+
+    The arithmetic mirrors ``models.layers.decode_attention`` *exactly*
+    (scores in the input dtype then cast to f32, probs cast back to the
+    value dtype) — not the f32-throughout ``decode_attention_ref`` — so a
+    paged decode step is bit-identical to the dense decode step it
+    replaces and batched greedy outputs match sequential ones token for
+    token.
+    """
+    np_, ps, hkv, hd = k_pages.shape
+    b, mp = block_tables.shape
+    h = q.shape[1]
+    g = h // hkv
+    kc = k_pages[block_tables].reshape(b, mp * ps, hkv, hd)
+    vc = v_pages[block_tables].reshape(b, mp * ps, hkv, hd)
+    qg = q.reshape(b, hkv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, kc).astype(jnp.float32) * scale
+    mask = jnp.arange(mp * ps)[None, :] < lengths[:, None]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(vc.dtype), vc)
+    return out.reshape(b, h, hd)

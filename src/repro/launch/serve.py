@@ -17,6 +17,10 @@ compiled executables).  The autoscale decision counters (scale_ups,
 scale_downs, machine_seconds, warmup_ticks, plane_scale_*) ride in the
 JSON summary.
 
+``--max-batch N`` (with ``--step-token-budget B``) turns on step-level
+continuous batching inside every unit (DESIGN.md §2.10); the knobs are
+echoed back under ``batching`` in the JSON summary.
+
 ``--fleet tpu:4:1.0:1.0,cpu:4:0.25:0.2`` builds every engine on a
 heterogeneous machine catalog (DESIGN.md §2.8: mtype, count, speed,
 per-machine cost rate, optional backend kind and queue size) instead of
@@ -41,6 +45,7 @@ from ..models import transformer as T
 from ..obs import (Telemetry, write_chrome_trace, write_jsonl,
                    write_metrics)
 from ..serving.autoscale import SCALER_POLICIES, ElasticityConfig
+from ..serving.batching import StepBatchingConfig
 from ..serving.cluster import (ROUTER_POLICIES, Router,
                                make_engine_plane_factory, make_engine_planes)
 from ..serving.engine import TICKS_PER_SEC, EngineConfig, Request
@@ -78,6 +83,14 @@ def main():
     ap.add_argument("--pruning", action="store_true")
     ap.add_argument("--rate", type=float, default=0.2)
     ap.add_argument("--deadline", type=float, default=400.0)
+    ap.add_argument("--max-batch", type=int, default=1,
+                    help=">1 turns on step-level continuous batching "
+                         "inside every unit (DESIGN.md §2.10): up to this "
+                         "many sequences share each engine step")
+    ap.add_argument("--step-token-budget", type=int, default=64,
+                    help="token budget per engine step (decodes first, "
+                         "remaining budget goes to prefill chunks); only "
+                         "meaningful with --max-batch > 1")
     ap.add_argument("--planes", type=int, default=1,
                     help="scheduling planes behind the front-door router")
     ap.add_argument("--router", default="least-loaded",
@@ -113,6 +126,10 @@ def main():
         elasticity=ElasticityConfig(policy=args.autoscale,
                                     max_extra=args.max_extra_units,
                                     cooldown=100.0),
+        batching=StepBatchingConfig(
+            max_batch=args.max_batch,
+            step_token_budget=args.step_token_budget)
+        if args.max_batch > 1 else None,
         max_len=64)
     planes = make_engine_planes(cfg, params, ecfg, args.planes)
     autoscale = plane_factory = None
@@ -132,6 +149,9 @@ def main():
     stats = router.run(trace)
     if fleet is not None:
         stats["fleet"] = fleet.serialize()
+    stats["batching"] = ({"max_batch": args.max_batch,
+                          "step_token_budget": args.step_token_budget}
+                         if args.max_batch > 1 else None)
     # stable consolidated summary (legacy top-level keys kept for one
     # release — see tests/test_cli.py back-compat assertions)
     stats["telemetry"] = {

@@ -21,8 +21,8 @@ from jax import lax
 from ..configs.base import ModelConfig
 from ..parallel import ctx as pctx
 from . import xlstm as xl
-from .layers import (attention_apply, attention_init, dense, embed,
-                     embed_init, mlp_apply, mlp_init, rmsnorm,
+from .layers import (apply_rope, attention_apply, attention_init, dense,
+                     embed, embed_init, mlp_apply, mlp_init, rmsnorm,
                      rmsnorm_init)
 from .moe import moe_apply, moe_init
 from .ssm import mamba2_apply, mamba2_init
@@ -660,6 +660,122 @@ def prefill_fn(cfg: ModelConfig, with_cache: bool = True):
         hidden = rmsnorm(params["final_ln"], hidden)
         logits = hidden[:, -1] @ _unembed_matrix(cfg, params)
         return logits.astype(jnp.float32), cache
+    return f
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int):
+    """Zero paged KV pool: one shared page arena per unit.
+
+    Sequences own non-contiguous pages through per-sequence block tables
+    (kept host-side by the engine); ``chunk_prefill_fn`` output is written
+    into pages and ``paged_decode_fn`` appends + attends through the
+    tables.  Attention families only (dense/vlm).
+    """
+    if cfg.family not in ("dense", "vlm"):
+        raise ValueError(f"paged cache unsupported for family {cfg.family}")
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, hd)
+    return {"kp": jnp.zeros(shape, jnp.bfloat16),
+            "vp": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def chunk_prefill_fn(cfg: ModelConfig):
+    """Returns f(params, tokens, prefix_k, prefix_v) -> (logits, k_new, v_new).
+
+    One chunk of a chunked prefill: ``tokens`` (B, C) is the next C prompt
+    tokens, ``prefix_k``/``prefix_v`` (L, B, P, Hkv, hd) the KV of the P
+    tokens already prefilled (RoPE'd at absolute positions 0..P-1 — the
+    same contract as ``prefill_from_cache``, of which this is the
+    unpadded, resumable core).  Returns last-position logits plus the KV
+    of *only the new chunk* (L, B, C, Hkv, hd) so the caller can append it
+    to paged storage and feed it back as prefix for the next chunk.
+    P=0 reduces to a cold prefill of the first chunk.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "vlm"):
+        raise ValueError(f"chunked prefill unsupported for family {fam}")
+
+    def f(params, tokens, prefix_k, prefix_v):
+        x = embed(params["embed"], tokens)
+        p_len = prefix_k.shape[2]
+
+        def blk(h, inp):
+            lp, pk, pv = inp
+            a, kv = attention_apply(lp["attn"], rmsnorm(lp["ln1"], h), cfg,
+                                    kv_out=True, prefix_kv=(pk, pv),
+                                    q_offset=p_len)
+            h = h + a
+            h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], h))
+            return h, kv
+
+        hidden, (ks_, vs_) = lax.scan(blk, x,
+                                      (params["layers"], prefix_k, prefix_v))
+        hidden = rmsnorm(params["final_ln"], hidden)
+        logits = hidden[:, -1] @ _unembed_matrix(cfg, params)
+        # attention_apply returns full-context KV; keep only the new chunk
+        return logits.astype(jnp.float32), ks_[:, :, p_len:], vs_[:, :, p_len:]
+    return f
+
+
+def paged_decode_fn(cfg: ModelConfig):
+    """Returns f(params, kp, vp, tables, lens, tokens) -> (logits, kp, vp).
+
+    Batched single-step decode over the paged KV pool: ``tokens`` (B,) are
+    the latest tokens of B independent sequences, ``tables`` (B, MP) their
+    page tables into the (L, NP, PS, Hkv, hd) pools and ``lens`` (B,)
+    their context lengths.  Each step RoPEs/projects the B tokens, writes
+    the new KV into page ``tables[b, len // PS]`` slot ``len % PS`` and
+    attends through the block tables (``paged_decode_attention``), so all
+    active sequences decode in one batched launch regardless of where
+    their KV lives.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "vlm"):
+        raise ValueError(f"paged decode unsupported for family {fam}")
+    if cfg.sliding_window:
+        raise ValueError("paged decode does not support sliding windows")
+    from ..kernels.decode_attention.ops import paged_decode_attention
+    hd = cfg.resolved_head_dim
+    h_, hkv = cfg.n_heads, cfg.n_kv_heads
+
+    def f(params, kp, vp, tables, lens, tokens):
+        x = embed(params["embed"], tokens[:, None])          # (B, 1, D)
+        b = x.shape[0]
+        ps = kp.shape[2]
+        positions = lens[:, None]
+        rows = jnp.arange(b)
+        page = tables[rows, lens // ps]                      # (B,)
+        slot = lens % ps
+
+        def layer_body(h, lp, kc, vc):
+            xn = rmsnorm(lp["ln1"], h)
+            q = dense(lp["attn"]["wq"], xn)
+            q = apply_rope(q.reshape(b, 1, h_, hd), positions, cfg.rope_theta)
+            k_new = apply_rope(dense(lp["attn"]["wk"], xn)
+                               .reshape(b, 1, hkv, hd), positions,
+                               cfg.rope_theta)
+            v_new = dense(lp["attn"]["wv"], xn).reshape(b, 1, hkv, hd)
+            kc = kc.at[page, slot].set(k_new[:, 0].astype(kc.dtype))
+            vc = vc.at[page, slot].set(v_new[:, 0].astype(vc.dtype))
+            a = paged_decode_attention(q[:, 0], kc, vc, tables, lens + 1)
+            h = h + dense(lp["attn"]["wo"], a.reshape(b, 1, h_ * hd))
+            h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], h))
+            return h, kc, vc
+
+        def layer(carry, lp):
+            h, k_all, v_all, i = carry
+            kc = lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+            vc = lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+            h, kc, vc = layer_body(h, lp, kc, vc)
+            k_all = lax.dynamic_update_index_in_dim(k_all, kc, i, 0)
+            v_all = lax.dynamic_update_index_in_dim(v_all, vc, i, 0)
+            return (h, k_all, v_all, i + 1), None
+
+        (h, kp, vp, _), _ = lax.scan(
+            layer, (x, kp, vp, jnp.int32(0)), params["layers"])
+        h = rmsnorm(params["final_ln"], h)
+        logits = (h[:, 0] @ _unembed_matrix(cfg, params)).astype(jnp.float32)
+        return logits, kp, vp
     return f
 
 

@@ -47,6 +47,8 @@ from ..core.pruning import PruningConfig
 from ..core.tasks import Machine, Task
 from ..models import transformer as T
 from .autoscale import ElasticityConfig, PoolScaler
+from .batching import (SeqState, StepBatchingConfig, UnitBatch, step_cost,
+                       task_dims)
 from .kvcache import CombinedPrefixIndex, PrefixKVCache
 
 
@@ -97,6 +99,20 @@ class TimeEstimator:
     def __init__(self, rel_std: float = 0.15):
         self.rel_std = rel_std
         self._ewma: dict = {}
+        # cold per-token rates in ticks: prefill and decode priced
+        # *separately* (a chunked prefill is linear in prompt tokens; decode
+        # steps carry their own per-token rate — the old formula conflated
+        # them into one blob).  Defaults reproduce the historical
+        # "~5 ticks per 64 prompt tokens, 4x per decoded token" exactly;
+        # ``calibrate`` replaces them with measured step-executable rates.
+        self.prefill_rate = 5.0 / 64.0
+        self.decode_rate = 20.0 / 64.0
+
+    def calibrate(self, prefill_rate: float, decode_rate: float) -> None:
+        """Pin the cold-estimate rates to measured per-token step costs
+        (ticks/token at speed 1), from a unit's compiled step executables."""
+        self.prefill_rate = max(prefill_rate, 1e-6)
+        self.decode_rate = max(decode_rate, 1e-6)
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -127,8 +143,10 @@ class TimeEstimator:
                 mu = v0 * (self._bucket(prompt_len) + self._bucket(n_new)) \
                     / (k0[1] + k0[2])
             else:
-                # cold estimate: ~5 ticks per 64 prompt tokens + decode steps
-                mu = 5.0 * (prompt_len + n_new * 4) / 64.0
+                # cold estimate from the (possibly calibrated) per-token
+                # rates: prompt tokens at the chunk-prefill rate plus decode
+                # steps at the decode-step rate
+                mu = prompt_len * self.prefill_rate + n_new * self.decode_rate
         return max(mu, 1.0), max(self.rel_std * mu, 0.5)
 
 
@@ -266,6 +284,251 @@ class _StubUnit:
         return 0.0
 
 
+class _UnitRunner:
+    """Live step executor for one compiled unit under continuous batching
+    (DESIGN.md §2.10).
+
+    Owns the unit's paged KV arena and the two step executables — chunked
+    prefill (``chunk_prefill_fn``) and batched paged decode
+    (``paged_decode_fn``) — and runs the launches behind a ``UnitBatch``
+    plan: every planned chunk is one prefill launch, all planned decodes
+    are ONE batched launch over the page tables.  Virtual step costs come
+    from calibrated per-token rates through the same fused-step formula as
+    the analytic substrates (``step_cost``), so the unit's timeline
+    reflects the modeled accelerator economics rather than the host's
+    per-launch overhead; the rates are EWMA-corrected from real walls
+    (fresh-shape compile spikes are rejected).
+
+    *Batchable* = greedy ``generate`` (all merged requests greedy — one
+    trajectory fanned out, truncated per request).  Everything else
+    (sampling, ``score``, over-long prompts) runs *exclusive*: the legacy
+    ``ProcessingUnit.execute`` as one opaque step monopolizing the unit.
+    """
+
+    def __init__(self, engine: "ServingEngine", unit: ProcessingUnit,
+                 cfgb: StepBatchingConfig):
+        self.eng = engine
+        self.unit = unit
+        self.m = unit.machine
+        self.cfgb = cfgb
+        mc = engine.model_cfg
+        self.ps = engine.cfg.kv_block_size
+        self.mp = -(-engine.cfg.max_len // self.ps)     # pages per sequence
+        n_pages = cfgb.max_batch * self.mp + 1          # page 0: pad scratch
+        self.pages = T.init_paged_cache(mc, n_pages, self.ps)
+        self.free = list(range(1, n_pages))
+        self._chunk = jax.jit(T.chunk_prefill_fn(mc))
+        self._pdec = jax.jit(T.paged_decode_fn(mc))
+        self.states: dict[int, dict] = {}               # id(SeqState) -> state
+        self._ticks = engine.cfg.time_scale / self.m.speed
+        self.rp = 0.0   # wall seconds per prefill token
+        self.rd = 0.0   # wall seconds per batch-1 decode step
+        self.setup_wall = self._calibrate()
+
+    def _calibrate(self) -> float:
+        """Compile the per-bucket step executables and measure the steady
+        per-token rates; the total wall is the unit's cold-start charge
+        (the step executables *are* the cold start under batching)."""
+        t0 = time.perf_counter()
+        eng, mc = self.eng, self.eng.model_cfg
+        hkv, hd = mc.n_kv_heads, mc.resolved_head_dim
+        c = max(1, min(self.cfgb.step_token_budget, eng.cfg.max_len - 1))
+        toks = jnp.zeros((1, c), jnp.int32)
+        pk = jnp.zeros((mc.n_layers, 1, 0, hkv, hd), jnp.bfloat16)
+        jax.block_until_ready(self._chunk(eng.params, toks, pk, pk)[0])
+        t1 = time.perf_counter()
+        jax.block_until_ready(self._chunk(eng.params, toks, pk, pk)[0])
+        self.rp = max(time.perf_counter() - t1, 1e-9) / c
+        for b in eng.cfg.batch_buckets:
+            if b > self.cfgb.max_batch:
+                break
+            tabs = jnp.zeros((b, self.mp), jnp.int32)
+            lens = jnp.zeros((b,), jnp.int32)
+            tk = jnp.zeros((b,), jnp.int32)
+            args = (eng.params, self.pages["kp"], self.pages["vp"],
+                    tabs, lens, tk)
+            jax.block_until_ready(self._pdec(*args)[0])
+            t2 = time.perf_counter()
+            jax.block_until_ready(self._pdec(*args)[0])
+            if b == 1:
+                self.rd = max(time.perf_counter() - t2, 1e-9)
+        return time.perf_counter() - t0
+
+    def _obs_rate(self, name: str, val: float) -> None:
+        cur = getattr(self, name)
+        if val > 8.0 * cur:
+            return      # a fresh-shape compile rode this launch
+        setattr(self, name, 0.7 * cur + 0.3 * val)
+
+    @staticmethod
+    def _batchable(reqs: list[Request]) -> bool:
+        return bool(reqs) and all(r.op == "generate" and r.temperature <= 0.0
+                                  and r.n_new >= 1 for r in reqs)
+
+    # -- membership -----------------------------------------------------------
+    def join(self, task: Task, reqs: list[Request], now: float,
+             ub: UnitBatch) -> None:
+        eng = self.eng
+        prompt = np.asarray(reqs[0].prompt if reqs else (), np.int32)
+        plen = len(prompt)
+        n_new = max((r.n_new for r in reqs), default=0)
+        if (not self._batchable(reqs)
+                or plen < 1 or plen + n_new > self.mp * self.ps):
+            # legacy exclusive execution, priced exactly as the sequential
+            # path (measured wall, TPU batch discount for merged requests)
+            dur = 0.0
+            if reqs:
+                wall, _ = self.unit.execute(task, reqs, eng._rng,
+                                            buckets=eng.cfg.batch_buckets)
+                dur = wall * self._ticks
+                k = len(reqs)
+                if k > 1:
+                    dur *= (1.0 + eng.cfg.batch_marginal_cost * (k - 1)) / k
+                eng.estimator.observe(
+                    eng.estimator.key(task.op, plen,
+                                      max(r.n_new for r in reqs), k), dur)
+                eng.stats["cost"] += dur * self.m.cost_rate
+            ub.join(SeqState(task=task, plen=max(plen, 1), n_new=n_new,
+                             exclusive=True, excl_left=dur), now)
+            return
+        # prefix-cache seeding: cached KV blocks stand in for the first P
+        # prompt tokens, pinned until the sequence completes
+        cache = eng.kvcaches.get(self.m.mid)
+        hit, p0, ks, vs = None, 0, [], []
+        if cache is not None and plen > 1 \
+                and plen <= eng.cfg.prefix_max_prompt:
+            hit = cache.lookup(reqs[0].prompt, max_tokens=plen - 1)
+            if hit:
+                pfx_k, pfx_v = eng._gather_prefix(hit)
+                p0 = pfx_k.shape[1]
+                ks, vs = [pfx_k], [pfx_v]
+        eng.stats["prefill_tokens"] += plen - p0
+        npg = -(-(plen + n_new) // self.ps)
+        tab = np.zeros((self.mp,), np.int32)
+        pids = [self.free.pop() for _ in range(npg)]
+        tab[:npg] = pids
+        seq = SeqState(task=task, plen=plen, n_new=n_new, prefill_done=p0)
+        self.states[id(seq)] = {
+            "prompt": prompt, "ptoks": reqs[0].prompt, "tab": tab,
+            "pids": pids, "hit": hit, "k": ks, "v": vs,
+            "out": [], "cur": -1, "len": 0}
+        ub.join(seq, now)
+
+    def release(self, seq: SeqState | None) -> None:
+        """Eviction cleanup: unpin and free the sequence's pages."""
+        st = self.states.pop(id(seq), None) if seq is not None else None
+        if st is None:
+            return
+        if st["hit"]:
+            self.eng.kvcaches[self.m.mid].release(st["hit"])
+        self.free.extend(st["pids"])
+
+    # -- step execution -------------------------------------------------------
+    def exec_step(self, plan) -> float:
+        if plan.exclusive is not None:
+            return plan.exclusive.excl_left
+        eng = self.eng
+        mc = eng.model_cfg
+        vc = 0.0
+        for s, c in plan.chunks:
+            st = self.states[id(s)]
+            t0 = time.perf_counter()
+            toks = jnp.asarray(
+                st["prompt"][None, s.prefill_done:s.prefill_done + c])
+            if st["k"]:
+                pk = jnp.asarray(np.concatenate(st["k"], axis=1))[:, None]
+                pv = jnp.asarray(np.concatenate(st["v"], axis=1))[:, None]
+            else:
+                pk = pv = jnp.zeros(
+                    (mc.n_layers, 1, 0, mc.n_kv_heads, mc.resolved_head_dim),
+                    jnp.bfloat16)
+            logits, kn, vn = self._chunk(eng.params, toks, pk, pv)
+            jax.block_until_ready(logits)
+            st["k"].append(np.asarray(kn[:, 0]))
+            st["v"].append(np.asarray(vn[:, 0]))
+            self._obs_rate("rp", (time.perf_counter() - t0) / c)
+            if s.prefill_done + c >= s.plen:
+                # final chunk: its last-position logits yield the first new
+                # token (what the sequential prefill's argmax produces) and
+                # the accumulated KV commits to this sequence's pages
+                st["cur"] = int(jnp.argmax(logits[0]))
+                st["out"].append(st["cur"])
+                self._commit(s, st)
+            vc += c * self.rp * self._ticks
+        vd = 0.0
+        k = len(plan.decode)
+        if k:
+            t0 = time.perf_counter()
+            bucket = next((b for b in eng.cfg.batch_buckets if b >= k), k)
+            toks = np.zeros((bucket,), np.int32)
+            tabs = np.zeros((bucket, self.mp), np.int32)
+            lens = np.zeros((bucket,), np.int32)
+            sts = [self.states[id(s)] for s in plan.decode]
+            for i, st in enumerate(sts):
+                toks[i] = st["cur"]
+                tabs[i] = st["tab"]
+                lens[i] = st["len"]
+            logits, kp, vp = self._pdec(
+                eng.params, self.pages["kp"], self.pages["vp"],
+                jnp.asarray(tabs), jnp.asarray(lens), jnp.asarray(toks))
+            jax.block_until_ready(logits)
+            self.pages = {"kp": kp, "vp": vp}
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for i, st in enumerate(sts):
+                st["len"] += 1
+                st["cur"] = int(nxt[i])
+                st["out"].append(st["cur"])
+            self._obs_rate("rd", (time.perf_counter() - t0) / k)
+            vd = (1.0 + self.cfgb.batch_marginal_cost * (k - 1)) \
+                * self.rd * self._ticks
+        dt = step_cost(vc, vd, self.cfgb.fused_step_overlap)
+        eng.stats["cost"] += dt * self.m.cost_rate
+        return dt
+
+    def _commit(self, s: SeqState, st: dict) -> None:
+        """Scatter the sequence's accumulated prefill KV into its pages."""
+        kk = np.concatenate(st["k"], axis=1)     # (L, plen, Hkv, hd)
+        vv = np.concatenate(st["v"], axis=1)
+        st["k"], st["v"] = [kk], [vv]
+        npg = -(-s.plen // self.ps)
+        pad = npg * self.ps - s.plen
+        if pad:
+            z = np.zeros(kk.shape[:1] + (pad,) + kk.shape[2:], kk.dtype)
+            kk = np.concatenate([kk, z], axis=1)
+            vv = np.concatenate([vv, z], axis=1)
+        shape = (kk.shape[0], npg, self.ps) + kk.shape[2:]
+        pids = jnp.asarray(st["pids"][:npg], jnp.int32)
+        self.pages = {
+            "kp": self.pages["kp"].at[:, pids].set(
+                jnp.asarray(kk.reshape(shape), self.pages["kp"].dtype)),
+            "vp": self.pages["vp"].at[:, pids].set(
+                jnp.asarray(vv.reshape(shape), self.pages["vp"].dtype))}
+        st["len"] = s.plen
+
+    # -- completion -----------------------------------------------------------
+    def complete(self, s: SeqState) -> None:
+        st = self.states.pop(id(s), None)
+        if st is None:
+            return      # exclusive: ``execute`` already wrote the results
+        eng = self.eng
+        for r in eng._inflight.get(s.task.tid, []):
+            r.tokens = list(st["out"][:r.n_new])
+        cache = eng.kvcaches.get(self.m.mid)
+        if cache is not None and s.plen > 1 \
+                and s.plen <= eng.cfg.prefix_max_prompt:
+            kk, vv = st["k"][0], st["v"][0]
+            cache.insert(st["ptoks"],
+                         lambda s0, s1: (kk[:, s0:s1], vv[:, s0:s1]))
+            if st["hit"]:
+                cache.release(st["hit"])
+        self.free.extend(st["pids"])
+        # keep the scheduler's estimates aligned with the step model: the
+        # sequence's batch-1 virtual duration under calibrated rates
+        mu = (s.plen * self.rp + s.n_new * self.rd) * eng.cfg.time_scale
+        eng.estimator.observe(
+            eng.estimator.key("generate", s.plen, s.n_new, 1), mu)
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -317,6 +580,12 @@ class EngineConfig:
     # context lengths but a memory cliff at multi-k prompts — longer prompts
     # take the cold tiled-flash path instead
     prefix_max_prompt: int = 1024
+    # step-level continuous batching (DESIGN.md §2.10): units co-run up to
+    # ``batching.max_batch`` sequences under a per-step token budget —
+    # chunked prefills coexist with batched paged decodes instead of
+    # head-of-line blocking them.  None keeps the run-to-completion path
+    # (and every existing trace) bit-identical.
+    batching: StepBatchingConfig | None = None
 
     def control(self) -> ControlConfig:
         # the hard-deadline regime rides with pruning: infeasible tasks are
@@ -393,6 +662,8 @@ class ServingEngine(Substrate):
             self.cp.prefix_fn = self._prefix_locality
         self._rng = np.random.default_rng(0)
         self._rid = 0
+        self._batches: dict[int, UnitBatch] = {}    # mid -> step walker
+        self._runners: dict[int, _UnitRunner] = {}  # mid -> live executor
         for spec in self.fleet.expand():
             self._add_unit(spec)
         self.scaler = None
@@ -471,6 +742,20 @@ class ServingEngine(Substrate):
                 spec=spec,
                 shared_fns=None if shared == _StubUnit.fns else shared)
         cold = unit.warmup(buckets=self.cfg.batch_buckets)
+        bat = self.cfg.batching
+        if bat is not None and bat.max_batch > 1:
+            unit.machine.max_batch = bat.max_batch
+            if unit.kind != "stub":
+                # the step executables (chunk prefill + per-bucket paged
+                # decode) are the cold start under batching: their compile
+                # wall joins the warm-up charge, and the measured rates
+                # recalibrate the estimator's cold formula
+                runner = _UnitRunner(self, unit, bat)
+                self._runners[unit.machine.mid] = runner
+                cold += runner.setup_wall
+                self.estimator.calibrate(
+                    runner.rp * self.cfg.time_scale,
+                    runner.rd * self.cfg.time_scale)
         if not stub or self._stub:
             self._warm_fns = unit.fns
         if shared is None:
@@ -600,6 +885,73 @@ class ServingEngine(Substrate):
         ks = [b.payload[0] for b in hit.blocks]
         vs = [b.payload[1] for b in hit.blocks]
         return np.concatenate(ks, axis=1), np.concatenate(vs, axis=1)
+
+    # -- step-level batching substrate (DESIGN.md §2.10) -----------------------
+    def _unit_batch(self, m: Machine) -> UnitBatch:
+        ub = self._batches.get(m.mid)
+        if ub is None:
+            def on_step(t, dt, plan):
+                tel = self.cp.tel
+                if tel.enabled:
+                    tel.event(t, "batch_step", machine=m.mid,
+                              plane=self.cp.plane_id, dt=round(dt, 9),
+                              tokens=plan.tokens, decode=len(plan.decode),
+                              chunks=len(plan.chunks))
+                    tel.metrics.observe("step_ticks", dt)
+
+            ub = self._batches[m.mid] = UnitBatch(self.cfg.batching,
+                                                  on_step=on_step)
+        return ub
+
+    def join_batch(self, task: Task, m: Machine, now: float) -> None:
+        """Admit a mapped task into the unit's step batch.  Stub-backed
+        units take the analytic path — oracle-sampled duration split into
+        per-token rates, *identically* to the simulator's ``join_batch`` —
+        so stub-engine ↔ simulator decision traces stay equivalent under
+        batching; compiled units hand off to their live runner."""
+        reqs = []
+        for t in task.all_requests():
+            reqs += self.requests.pop(t.tid, [])
+            self._oracle_forget(t.tid)
+        self._inflight[task.tid] = reqs
+        self.stats["executions"] += 1
+        ub = self._unit_batch(m)
+        unit = self._unit(m.mid)
+        if self._stub or unit.kind == "stub":
+            task._stub_backend = not self._stub
+            cfgb = self.cfg.batching
+            dur = self.oracle.sample(task, m)
+            self.stats["cost"] += dur * m.cost_rate
+            plen, n_new = task_dims(task, cfgb)
+            wp = dur * cfgb.prefill_fraction
+            ub.join(SeqState(task=task, plen=plen, n_new=n_new,
+                             prefill_rate=wp / plen,
+                             decode_step=(dur - wp) / max(n_new, 1)), now)
+            return
+        self._runners[m.mid].join(task, reqs, now, ub)
+
+    def run_quantum(self, m: Machine, now: float):
+        ub = self._batches.get(m.mid)
+        if ub is None or ub.empty:
+            return None, []
+        runner = self._runners.get(m.mid)
+        t_end, completed = ub.run_quantum(
+            now, exec_fn=runner.exec_step if runner is not None else None)
+        if t_end is None:
+            return None, []
+        if runner is not None:
+            for s in completed:
+                runner.complete(s)
+        return t_end, [s.task for s in completed]
+
+    def evict_from_batch(self, task: Task, m: Machine, now: float) -> None:
+        ub = self._batches.get(m.mid)
+        if ub is None:
+            return
+        seq = ub.evict(task)
+        runner = self._runners.get(m.mid)
+        if runner is not None:
+            runner.release(seq)
 
     # -- execution substrate ---------------------------------------------------
     def begin_execution(self, task: Task, m: Machine, now: float) -> float:
@@ -832,6 +1184,8 @@ class _EngineUnitPool:
         # (identical to the legacy last-idle scan on a homogeneous pool)
         i = max(idle, key=lambda j: (units[j].machine.cost_rate, j))
         unit = units.pop(i)
+        self.eng._batches.pop(unit.machine.mid, None)
+        self.eng._runners.pop(unit.machine.mid, None)
         cache = self.eng.kvcaches.pop(unit.machine.mid, None)
         if cache is not None:
             # carry the retired cache's counters so end-of-run prefix

@@ -35,6 +35,15 @@ def test_serve_cli(tmp_path):
     assert '"completed"' in out
 
 
+def test_serve_cli_batching():
+    out = _run(["repro.launch.serve", "--requests", "10", "--units", "1",
+                "--rate", "0.5", "--max-batch", "4",
+                "--step-token-budget", "32"])
+    # the batching knobs are echoed back in the JSON summary
+    assert '"max_batch": 4' in out and '"step_token_budget": 32' in out
+    assert '"completed"' in out
+
+
 def test_serve_cli_autoscale():
     out = _run(["repro.launch.serve", "--requests", "10", "--units", "1",
                 "--rate", "0.5", "--autoscale", "success-chance",
