@@ -34,6 +34,9 @@ from repro.models import transformer as T
 from repro.serving.autoscale import ElasticityConfig
 from repro.serving.batching import SeqState, StepBatchingConfig, UnitBatch
 from repro.serving.cluster import Plane, Router, make_engine_planes
+from repro.serving.workload import (SessionConfig, SessionPool,
+                                    StagedConfig, StagedPool, TenantSpec,
+                                    WorkloadDriver)
 from repro.serving.engine import (TICKS_PER_SEC, EngineConfig,
                                   ProcessingUnit, Request, ServingEngine)
 
@@ -733,6 +736,173 @@ def continuous_batching(csv: Csv, checks: dict,
     return rows
 
 
+def _session_tenants():
+    return [TenantSpec("gold", share=0.3, slack=0.6, priority=1),
+            TenantSpec("free", share=0.7, slack=1.2)]
+
+
+def _session_row(mode: str, substrate: str, stats: dict, summary: dict,
+                 wall: float) -> dict:
+    per = summary.get("per_turn") or summary["per_stage"]
+    submitted = sum(r["submitted"] for r in per)
+    on_time = sum(r["on_time"] for r in per)
+    execs = max(stats.get("executions", 0), 1)
+    return {
+        "mode": mode, "substrate": substrate,
+        "users": summary.get("users", summary.get("dags")),
+        "turns": summary.get("turns", summary.get("stages")),
+        "submitted": submitted,
+        "completed": sum(r["completed"] for r in per),
+        "on_time": on_time,
+        "dropped": sum(r["dropped"] for r in per),
+        "on_time_rate": round(on_time / max(submitted, 1), 4),
+        "sessions_done": summary.get("sessions_done",
+                                     summary.get("dags_done")),
+        "peak_active": summary.get("peak_active_sessions",
+                                   summary.get("peak_active_dags")),
+        "prefix_hit_rate": round(stats.get("prefix_hits", 0) / execs, 4),
+        "tenant_on_time": {
+            name: {"submitted": t["submitted"], "on_time": t["on_time"],
+                   "on_time_rate": round(t["on_time_rate"], 4)}
+            for name, t in summary["tenants"].items()},
+        "wall_s": round(wall, 3),
+    }
+
+
+def closed_loop_sessions(csv: Csv, checks: dict,
+                         users_sim: int = 1_000_000,
+                         users_engine: int = 1_000,
+                         strict: bool = True) -> list[dict]:
+    """Closed-loop session workload (DESIGN.md §2.11): open-loop vs
+    closed-loop vs staged-DAG traffic with gold/free SLO tiers on the stub
+    engine (per-tenant on-time split per row), one ``users_sim``-user
+    4-turn closed-loop row on the simulator (streaming generator — the
+    ``peak_active`` column is the bounded-memory evidence: per-session
+    state exists only in flight or thinking, never O(users)), and the same
+    generator at 1/1000 scale on the live engine, where multi-turn
+    sessions re-arrive with grown prefixes and must beat the single-shot
+    baseline's prefix hit rate strictly."""
+    tenants = _session_tenants()
+    pet = PETMatrix.generate(["generate"], ["m0"],
+                             np.random.default_rng(31), mean_range=(8, 16))
+    rows = []
+
+    def stub_router():
+        eng = ServingEngine(None, None, EngineConfig(
+            n_units=2, elasticity=None, result_cache=False,
+            prefix_cache=False, heuristic="EDF", merging="adaptive"),
+            stub_oracle=PETOracle(pet, seed=11))
+        return Router([Plane(eng, pid=0)], policy="round-robin",
+                      shared_detector=False)
+
+    # -- open vs closed vs staged on the stub engine (same tenant tiers) ----
+    trio = (
+        ("open_loop", SessionPool(SessionConfig(
+            users=48, turns=1, arrival_rate=0.4, deadline=150.0, seed=7),
+            tenants)),
+        ("closed_loop", SessionPool(SessionConfig(
+            users=12, turns=4, arrival_rate=0.4,
+            think=("uniform", 2.0, 6.0), deadline=150.0, seed=7), tenants)),
+        ("staged_dag", StagedPool(StagedConfig(
+            dags=12, arrival_rate=0.3, slack=3.0, seed=7), tenants)),
+    )
+    for mode, pool in trio:
+        t0 = time.perf_counter()
+        stats = WorkloadDriver(stub_router(), pool).run()
+        row = _session_row(mode, "stub-engine", stats, pool.summary(),
+                           time.perf_counter() - t0)
+        rows.append(row)
+        csv.add(f"sessions_{mode}", submitted=row["submitted"],
+                on_time_rate=row["on_time_rate"],
+                gold=row["tenant_on_time"]["gold"]["on_time_rate"],
+                free=row["tenant_on_time"]["free"]["on_time_rate"])
+        checks[f"sessions_accounted_{mode}"] = \
+            stats["completed"] + stats["dropped"] == row["submitted"]
+    checks["sessions_tenant_split"] = all(
+        set(r["tenant_on_time"]) == {"gold", "free"} for r in rows)
+
+    # -- million-user closed loop on the simulator (streaming, emit=task) ---
+    fast_pet = PETMatrix.generate(["generate"], ["m0"],
+                                  np.random.default_rng(3),
+                                  mean_range=(0.05, 0.1))
+    sim = Simulator([], [Machine(mid=i, queue_size=64) for i in range(8)],
+                    PETOracle(fast_pet, seed=11),
+                    SimConfig(heuristic="EDF", merging="none"))
+    router = Router([Plane(sim, pid=0)], policy="round-robin",
+                    shared_detector=False)
+    pool = SessionPool(SessionConfig(
+        users=users_sim, turns=4, arrival_rate=20.0, think=("const", 0.5),
+        deadline=100.0, emit="task", n_new=1, seed=1))
+    t0 = time.perf_counter()
+    stats = WorkloadDriver(router, pool).run()
+    wall = time.perf_counter() - t0
+    summary = pool.summary()
+    row = _session_row("closed_loop_at_scale", "simulator", stats, summary,
+                       wall)
+    rows.append(row)
+    csv.add("sessions_at_scale", users=users_sim,
+            tasks=row["submitted"], peak_active=row["peak_active"],
+            tasks_per_sec=round(row["submitted"] / max(wall, 1e-9)),
+            on_time_rate=row["on_time_rate"])
+    checks["sessions_scale_all_finished"] = \
+        summary["sessions_done"] == users_sim
+    # the streaming bound: concurrently-active sessions, not user count
+    checks["sessions_scale_memory_bounded"] = \
+        row["peak_active"] < users_sim / 10
+    if strict:
+        checks["sessions_scale_million"] = users_sim >= 1_000_000
+        checks["sessions_scale_memory_tight"] = \
+            row["peak_active"] < users_sim / 1000
+
+    # -- same generator, 1/1000 scale, live engine: prefix-reuse gain -------
+    cfg, params = _model()
+
+    def live_router():
+        eng = ServingEngine(cfg, params, EngineConfig(
+            n_units=1, elasticity=None, result_cache=False,
+            prefix_cache=True, heuristic="EDF", merging="none",
+            max_len=64, kv_block_size=4))
+        return Router([Plane(eng, pid=0)], policy="round-robin",
+                      shared_detector=False)
+
+    hit_rate = {}
+    for mode, users, turns in (
+            ("engine_closed_loop", users_engine, 4),
+            ("engine_single_shot", users_engine * 4, 1)):
+        pool = SessionPool(SessionConfig(
+            users=users, turns=turns, arrival_rate=0.02,
+            think=("uniform", 5.0, 10.0), deadline=500.0, vocab=250,
+            seed=7))
+        t0 = time.perf_counter()
+        stats = WorkloadDriver(live_router(), pool,
+                               record_hit_depth=True).run()
+        row = _session_row(mode, "engine", stats, pool.summary(),
+                           time.perf_counter() - t0)
+        row["per_turn_hit_depth"] = [
+            round(r["mean_hit_depth"], 3) for r in pool.summary()["per_turn"]]
+        rows.append(row)
+        hit_rate[mode] = row["prefix_hit_rate"]
+        csv.add(f"sessions_{mode}", requests=row["submitted"],
+                prefix_hit_rate=row["prefix_hit_rate"],
+                on_time_rate=row["on_time_rate"])
+        if turns > 1:
+            depths = row["per_turn_hit_depth"]
+            # turn k's hit depth never regresses below turn k-1's
+            checks["sessions_turn_depth_monotone"] = all(
+                b >= a for a, b in zip(depths, depths[1:]))
+            checks["sessions_turn_depth_positive"] = depths[-1] > 0.0
+    # the acceptance criterion: multi-turn beats single-shot strictly
+    checks["sessions_prefix_gain"] = \
+        hit_rate["engine_closed_loop"] > hit_rate["engine_single_shot"]
+
+    # schema guard for render_experiments.py / CI smoke
+    checks["sessions_rows_schema"] = all(
+        {"mode", "substrate", "users", "turns", "submitted", "on_time",
+         "on_time_rate", "prefix_hit_rate", "peak_active",
+         "tenant_on_time"} <= set(r) for r in rows)
+    return rows
+
+
 def run(csv: Csv, n_requests: int = 60) -> dict:
     checks = {}
     cfg, params = _model()
@@ -796,13 +966,16 @@ def run(csv: Csv, n_requests: int = 60) -> dict:
     qos_rows = qos_attribution(csv, checks)
     # --- continuous batching: tokens/sec per unit + p95 decode latency -----
     batching_rows = continuous_batching(csv, checks)
+    # --- closed-loop sessions: multi-turn users, DAGs, SLO tiers, 1M scale -
+    sessions_rows = closed_loop_sessions(csv, checks)
     with open(OUT_PATH, "w") as f:
         json.dump({"bench": "serving_control_plane", "rows": rows,
                    "router_rows": router_rows,
                    "autoscale_rows": autoscale_rows,
                    "hetero_rows": hetero_rows,
                    "qos_rows": qos_rows,
-                   "batching_rows": batching_rows}, f, indent=1)
+                   "batching_rows": batching_rows,
+                   "sessions_rows": sessions_rows}, f, indent=1)
     return checks
 
 
@@ -838,11 +1011,17 @@ if __name__ == "__main__":
         batching_rows = continuous_batching(csv, checks,
                                             concurrencies=(8, 16),
                                             n_new=12, strict=False)
+        # closed-loop smoke: scaled-down populations (2000 simulated
+        # users, 24 engine sessions), schema + accounting + prefix-gain
+        # checks stay on (strict only drops the million-user claims)
+        sessions_rows = closed_loop_sessions(csv, checks, users_sim=2000,
+                                             users_engine=24, strict=False)
         payload = {"bench": "serving_autoscale_smoke",
                    "autoscale_rows": autoscale_rows,
                    "hetero_rows": hetero_rows,
                    "qos_rows": qos_rows,
-                   "batching_rows": batching_rows}
+                   "batching_rows": batching_rows,
+                   "sessions_rows": sessions_rows}
         # own artifact: never clobber the full run's BENCH_serving.json
         smoke_path = OUT_PATH.replace("BENCH_serving",
                                       "BENCH_autoscale_smoke")

@@ -249,6 +249,52 @@ def continuous_batching_table(path="../BENCH_serving.json"):
     return "\n".join(out)
 
 
+def sessions_table(path="../BENCH_serving.json"):
+    """Closed-loop session workload: open vs closed vs staged traffic with
+    per-tenant on-time split, the million-user streaming row, and the
+    live-engine prefix-reuse gain (DESIGN.md §2.11;
+    benchmarks/serving.py::closed_loop_sessions)."""
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return "(run `python -m benchmarks.run --only serving` first)"
+    rows = json.load(open(p)).get("sessions_rows", [])
+    if not rows:
+        return "(re-run `python -m benchmarks.run --only serving`: " \
+               "no sessions_rows in BENCH_serving.json)"
+    head = ["mode", "substrate", "users", "turns", "submitted", "on-time",
+            "gold on-time", "free on-time", "prefix hit rate",
+            "peak active"]
+    out = ["| " + " | ".join(head) + " |", "|" + "---|" * len(head)]
+    for r in rows:
+        ten = r["tenant_on_time"]
+        gold = ten.get("gold", {}).get("on_time_rate")
+        free = ten.get("free", {}).get("on_time_rate")
+        out.append("| " + " | ".join(str(c) for c in (
+            r["mode"], r["substrate"], r["users"], r["turns"],
+            r["submitted"], f"{r['on_time_rate']:.2%}",
+            f"{gold:.2%}" if gold is not None else "—",
+            f"{free:.2%}" if free is not None else "—",
+            f"{r['prefix_hit_rate']:.2%}", r["peak_active"])) + " |")
+    by_mode = {r["mode"]: r for r in rows}
+    scale = by_mode.get("closed_loop_at_scale")
+    if scale:
+        out.append(
+            f"\n{scale['users']:,} simulated users x {scale['turns']} turns "
+            f"streamed with only {scale['peak_active']} sessions ever "
+            f"concurrently active (per-session state is O(active), not "
+            f"O(users))")
+    closed, single = (by_mode.get("engine_closed_loop"),
+                      by_mode.get("engine_single_shot"))
+    if closed and single:
+        out.append(
+            f"\nlive-engine prefix reuse: multi-turn sessions hit the KV "
+            f"prefix cache at {closed['prefix_hit_rate']:.0%} "
+            f"(per-turn depth {closed.get('per_turn_hit_depth')}) vs "
+            f"{single['prefix_hit_rate']:.0%} for the single-shot baseline "
+            f"on the same request volume")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     cur = load("dryrun.jsonl")
     base = load("dryrun_baseline.jsonl")
@@ -280,3 +326,6 @@ if __name__ == "__main__":
     print("\n## §Continuous batching — tokens/sec per unit + p95 decode "
           "latency under chunked prefill\n")
     print(continuous_batching_table())
+    print("\n## §Sessions — closed-loop users, staged DAGs, SLO tiers "
+          "(million-user streaming + live-engine prefix gain)\n")
+    print(sessions_table())

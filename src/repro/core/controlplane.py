@@ -159,6 +159,13 @@ class ControlPlane:
         self.plane_id = 0
         #: optional callable(cp) invoked after every mapping event
         self.after_mapping = None
+        #: optional callable(request_task, now, outcome) fired per request
+        #: after completion ("done"), result-cache service ("served") or a
+        #: drop ("dropped") — the closed-loop workload hook (session wakeup,
+        #: staged-DAG re-admission).  Receivers must never schedule into
+        #: this plane's event heap directly; re-arrivals go back through
+        #: the front door so admission stays a routing decision.
+        self.on_complete = None
         #: optional callable(task, machine) -> cached-prefix tokens, wired by
         #: substrates that own a prefix KV cache; surfaces to heuristics as
         #: ``MappingContext.prefix_overlap`` (prefix-cache-aware mapping)
@@ -260,6 +267,8 @@ class ControlPlane:
                         self.tel.event(self.now, "served_at_ingest",
                                        plane=self.plane_id)
                         self.tel.metrics.inc("served_at_ingest")
+                        if self.on_complete is not None:
+                            self.on_complete(item, self.now, "served")
                 self._mapping_event()
             elif kind == "finish":
                 mid, epoch = payload
@@ -288,7 +297,8 @@ class ControlPlane:
             task.queue_rank = task.arrival
         idx = self._index(task)
         self.tel.event(self.now, "arrive", req=idx, plane=self.plane_id,
-                       ttype=task.ttype, deadline=round(task.deadline, 9))
+                       ttype=task.ttype, deadline=round(task.deadline, 9),
+                       tenant=task.tenant)
         self.tel.metrics.inc("requests_arrived")
         if self.cfg.merging == "none":
             self.batch.append(task)
@@ -479,8 +489,11 @@ class ControlPlane:
                     chance=None if chance is None else round(chance, 9),
                     threshold=(None if threshold is None
                                else round(threshold, 9)),
-                    plane=self.plane_id)
+                    plane=self.plane_id, tenant=r.tenant)
+                if r.tenant is not None:
+                    self.tel.metrics.inc("tenant_dropped", tenant=r.tenant)
             self.tel.metrics.inc("drops", n, reason=reason)
+        self._notify_complete(task, "dropped")
 
     def _deadlock_drain(self) -> None:
         """No future events and an unmappable batch: nothing can ever make
@@ -505,6 +518,13 @@ class ControlPlane:
             for r in reqs:
                 self.tel.metrics.observe("queue_wait", self.now - r.arrival)
 
+    def _notify_complete(self, task: Task, outcome: str) -> None:
+        """Closed-loop workload hook: per-request fan-out of ``on_complete``
+        after substrate accounting (see the attribute doc in __init__)."""
+        if self.on_complete is not None:
+            for r in task.all_requests():
+                self.on_complete(r, self.now, outcome)
+
     def _tel_finish(self, task: Task, m: Machine, missed: int) -> None:
         self._log("finish", self._index(task), round(self.now, 6), missed)
         if self.tel.enabled:
@@ -512,6 +532,11 @@ class ControlPlane:
             self.tel.event(self.now, "exec_end", task=self._index(task),
                            machine=m.mid, plane=self.plane_id,
                            n_requests=len(reqs), missed=missed)
+            # per-tenant exec-cost attribution: the measured occupancy span
+            # is billed at the machine's cost rate, split over the served
+            # requests (a merged compound shares one execution)
+            span = self.now - getattr(task, "_exec_start", self.now)
+            cost_share = span * m.cost_rate / len(reqs)
             for r in reqs:
                 latency = self.now - r.arrival
                 slack = r.deadline - self.now
@@ -521,11 +546,20 @@ class ControlPlane:
                                task=self._index(task),
                                latency=round(latency, 9),
                                slack=round(slack, 9), on_time=on_time,
-                               plane=self.plane_id)
+                               plane=self.plane_id, tenant=r.tenant)
                 self.tel.metrics.observe("latency", latency)
                 self.tel.metrics.observe("slack", slack)
                 self.tel.metrics.inc("completed")
                 self.tel.metrics.inc("on_time" if on_time else "missed")
+                if r.tenant is not None:
+                    self.tel.metrics.inc("tenant_completed", tenant=r.tenant)
+                    self.tel.metrics.inc(
+                        "tenant_on_time" if on_time else "tenant_missed",
+                        tenant=r.tenant)
+                    self.tel.metrics.observe("tenant_latency", latency,
+                                             tenant=r.tenant)
+                    self.tel.metrics.inc("tenant_exec_cost", cost_share,
+                                         tenant=r.tenant)
             if len(reqs) > 1:
                 # measured merge saving: one execution served k requests, so
                 # (k-1) duplicate executions of this measured length were
@@ -568,6 +602,7 @@ class ControlPlane:
         self.stats["last_completion"] = max(self.stats["last_completion"],
                                             self.now)
         self._tel_finish(task, m, missed)
+        self._notify_complete(task, "done")
         self._start_next(m)
 
     # -- step-level batching (machines with ``max_batch > 1``) ---------------
@@ -625,4 +660,5 @@ class ControlPlane:
             self.stats["last_completion"] = max(
                 self.stats["last_completion"], self.now)
             self._tel_finish(task, m, missed)
+            self._notify_complete(task, "done")
         m.running = m.active[0] if m.active else None

@@ -32,6 +32,11 @@ class Task:
     priority: int = 0
     tokens: Optional[tuple] = None  # prompt token ids (prefix-reuse scoring);
                                     # None for workloads without token detail
+    # workload identity (serving.workload: closed-loop sessions, staged
+    # DAGs, SLO tiers) — None/0 for open-loop traffic
+    tenant: Optional[str] = None    # SLO tier name; rides into obs labels
+    session: Optional[int] = None   # closed-loop session / DAG uid
+    turn: int = 0                   # conversation turn / DAG stage ordinal
     tid: int = field(default_factory=lambda: next(_task_counter))
 
     # merging state --------------------------------------------------------

@@ -1,4 +1,11 @@
-"""Workload generators for the Chapter 4/5 experiments.
+"""Workload generators for the Chapter 4/5 experiments (back-compat home).
+
+The generator bodies moved to ``repro.serving.workload.generators``, where
+their arrival shaping runs through the shared :class:`ArrivalProcess`
+abstraction (the Chapter-4 base/high-load cycle is a ``DiurnalProcess``,
+the Chapter-5 per-type bursts a ``SpikeSchedule``) — see DESIGN.md §2.11.
+These wrappers preserve the original import path and, draw-for-draw, the
+original RNG sequences: same seed, same tasks as before the re-host.
 
 * ``video_streaming_workload`` — Chapter 4: tasks arrive in groups of five
   consecutive segments; the arrival rate toggles between a base period and a
@@ -14,9 +21,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import numpy as np
-
-from .merge_model import CODEC_PARAMS, VIC_OPS, VideoExecModel, VideoMeta
+from .merge_model import VideoExecModel, VideoMeta
 from .tasks import Machine, PETMatrix, Task
 
 
@@ -28,11 +33,12 @@ class VideoWorkload:
     span: float
 
 
-_VIC_PARAMS = {
-    "bitrate": ("384K", "512K", "768K", "1024K", "1536K"),
-    "framerate": ("10", "15", "20", "30", "40"),
-    "resolution": ("352x288", "680x320", "720x480", "1280x800", "1920x1080"),
-}
+@dataclass
+class HCWorkload:
+    tasks: list[Task]
+    pet: PETMatrix
+    machines: list[Machine]
+    span: float
 
 
 def video_streaming_workload(n_tasks: int, span: float = 600.0,
@@ -41,65 +47,11 @@ def video_streaming_workload(n_tasks: int, span: float = 600.0,
                              codec_share: float = 0.15) -> VideoWorkload:
     """Chapter-4 workload: ``n_tasks`` transcoding requests over ``span``
     seconds with base/high-load cycles and overlapping viewer interests."""
-    rng = np.random.default_rng(seed)
-    exec_model = VideoExecModel(seed=seed + 1)
-    videos = {}
-    for vid in range(n_videos):
-        for seg in range(seg_per_video):
-            videos[f"v{vid}s{seg}"] = VideoMeta.sample(rng)
-
-    # base/high-load cycle: high period = span/ (15 cycles * 4), 2x rate
-    n_cycles = 15
-    cycle = span / n_cycles
-    high_len = cycle / 4.0
-
-    def arrival_weight(t: float) -> float:
-        return 2.0 if (t % cycle) < high_len else 1.0
-
-    # rejection-sample arrival times to follow the toggled rate
-    times = []
-    while len(times) < n_tasks:
-        t = float(rng.uniform(0, span))
-        if rng.random() < arrival_weight(t) / 2.0:
-            times.append(t)
-    times.sort()
-
-    tasks = []
-    i = 0
-    while i < len(times):
-        # groups of 5 consecutive segments per "viewer" request burst
-        vid = int(rng.integers(0, n_videos))
-        seg0 = int(rng.integers(0, seg_per_video))
-        if rng.random() < codec_share:
-            op = str(rng.choice(CODEC_PARAMS))
-            param = op
-        else:
-            op = str(rng.choice(VIC_OPS))
-            param = str(rng.choice(_VIC_PARAMS[op]))
-        user = f"u{int(rng.integers(0, max(4, n_tasks // 50)))}"
-        for g in range(5):
-            if i >= len(times):
-                break
-            seg = (seg0 + g) % seg_per_video
-            data_id = f"v{vid}s{seg}"
-            v = videos[data_id]
-            exec_est = exec_model.individual_time(v, op, noisy=False)
-            slack = float(rng.uniform(*deadline_slack))
-            t_arr = times[i]
-            tasks.append(Task(ttype=op, data_id=data_id, op=op, params=(param,),
-                              arrival=t_arr, deadline=t_arr + slack * exec_est,
-                              user=user))
-            i += 1
-    return VideoWorkload(tasks=tasks, videos=videos, exec_model=exec_model,
-                         span=span)
-
-
-@dataclass
-class HCWorkload:
-    tasks: list[Task]
-    pet: PETMatrix
-    machines: list[Machine]
-    span: float
+    # lazy: core must stay importable without the serving package loaded
+    from ..serving.workload.generators import build_video_streaming_workload
+    return build_video_streaming_workload(
+        n_tasks, span=span, n_videos=n_videos, seg_per_video=seg_per_video,
+        seed=seed, deadline_slack=deadline_slack, codec_share=codec_share)
 
 
 def spiky_hc_workload(n_tasks: int, span: float = 500.0, n_task_types: int = 12,
@@ -111,44 +63,9 @@ def spiky_hc_workload(n_tasks: int, span: float = 500.0, n_task_types: int = 12,
     """Chapter-5 workload (Fig. 5.9): per-type arrival spikes over a base
     rate, inconsistently heterogeneous PET matrix, machines of
     ``n_machine_types`` types with distinct cost/power rates."""
-    rng = np.random.default_rng(seed)
-    ttypes = [f"t{i}" for i in range(n_task_types)]
-    mtypes = ["m0"] if homogeneous else [f"m{i}" for i in range(n_machine_types)]
-    pet = PETMatrix.generate(ttypes, mtypes, rng, mean_range=(8, 40), cv=cv,
-                             inconsistent=not homogeneous)
-
-    machines = []
-    for j in range(n_machines):
-        mt = mtypes[j % len(mtypes)]
-        # faster machine types cost more (Fig. 5.19 cost/energy model)
-        idx = mtypes.index(mt)
-        machines.append(Machine(mid=j, mtype=mt, queue_size=queue_size,
-                                cost_rate=1.0 + 0.5 * idx,
-                                power=1.0 + 0.35 * idx))
-
-    # per-type spike schedule: each type gets 2-4 spike windows
-    spikes = {}
-    for tt in ttypes:
-        k = int(rng.integers(2, 5))
-        starts = rng.uniform(0, span * 0.9, size=k)
-        spikes[tt] = [(s, s + span * 0.05) for s in starts]
-
-    def weight(tt: str, t: float) -> float:
-        return 4.0 if any(a <= t < b for a, b in spikes[tt]) else 1.0
-
-    tasks = []
-    while len(tasks) < n_tasks:
-        tt = str(rng.choice(ttypes))
-        t = float(rng.uniform(0, span))
-        if rng.random() < weight(tt, t) / 4.0:
-            mean_exec = np.mean([pet.mean(tt, m) for m in machines])
-            slack = float(rng.uniform(*deadline_slack))
-            tasks.append(Task(ttype=tt, data_id=f"d{len(tasks)}", op=tt,
-                              arrival=t, deadline=t + slack * mean_exec))
-    tasks.sort(key=lambda x: x.arrival)
-
-    if uncertainty_mult != 1.0:
-        # ground-truth runtimes get (5SD/10SD experiments) wider spread than
-        # the estimator believes — see Simulator.exec_sample
-        pass
-    return HCWorkload(tasks=tasks, pet=pet, machines=machines, span=span)
+    from ..serving.workload.generators import build_spiky_hc_workload
+    return build_spiky_hc_workload(
+        n_tasks, span=span, n_task_types=n_task_types, n_machines=n_machines,
+        n_machine_types=n_machine_types, queue_size=queue_size, seed=seed,
+        deadline_slack=deadline_slack, cv=cv, homogeneous=homogeneous,
+        uncertainty_mult=uncertainty_mult)

@@ -27,6 +27,14 @@ per-machine cost rate, optional backend kind and queue size) instead of
 ``--units`` identical units; cost-aware mapping (``--heuristic MCMD``)
 and the per-mtype-billed cost counters (cost, pool_cost) ride in the
 JSON summary.
+
+``--workload closed_loop:<users>:<think>`` replaces the open-loop trace
+with the closed-loop session generator (DESIGN.md §2.11): each user is a
+multi-turn conversation whose next turn re-arrives after a think time,
+with the grown token prefix exercising the prefix KV cache.
+``--tenants gold:1:0.5:1,free:3`` splits users over SLO tiers
+(name:share:slack:priority); per-tenant and per-turn counters ride under
+``workload`` in the JSON summary (telemetry schema 2).
 """
 
 from __future__ import annotations
@@ -42,8 +50,8 @@ from ..configs.registry import get_arch
 from ..core.fleet import FleetSpec
 from ..core.pruning import PruningConfig
 from ..models import transformer as T
-from ..obs import (Telemetry, write_chrome_trace, write_jsonl,
-                   write_metrics)
+from ..obs import (SCHEMA_VERSION, Telemetry, write_chrome_trace,
+                   write_jsonl, write_metrics)
 from ..serving.autoscale import SCALER_POLICIES, ElasticityConfig
 from ..serving.batching import StepBatchingConfig
 from ..serving.cluster import (ROUTER_POLICIES, Router,
@@ -104,6 +112,19 @@ def main():
     ap.add_argument("--extra-planes", type=int, default=0,
                     help="plane-pool headroom for router autoscaling "
                          "(0 disables)")
+    ap.add_argument("--workload", default=None,
+                    help="closed_loop:<users>[:<think>] switches from the "
+                         "open-loop trace to the closed-loop session "
+                         "generator (DESIGN.md §2.11): <users> multi-turn "
+                         "sessions with mean think time <think> seconds "
+                         "between turns")
+    ap.add_argument("--turns", type=int, default=4,
+                    help="turns per closed-loop session")
+    ap.add_argument("--tenants", default=None,
+                    help="SLO tiers name[:share[:slack[:priority]]] "
+                         "comma-separated (e.g. gold:1:0.5:1,free:3); "
+                         "closed-loop users are split over tiers and the "
+                         "summary carries per-tenant accounting")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome trace-event JSON (Perfetto-"
                          "viewable: one track per machine/plane) here")
@@ -144,9 +165,28 @@ def main():
     tel = Telemetry(wall_clock=time.perf_counter)
     router = Router(planes, policy=args.router, autoscale=autoscale,
                     plane_factory=plane_factory, telemetry=tel)
-    trace = synth_trace(args.requests, cfg.vocab, rate=args.rate,
-                        deadline=args.deadline)
-    stats = router.run(trace)
+    workload = None
+    if args.workload:
+        from ..serving.workload import (SessionConfig, SessionPool,
+                                        WorkloadDriver, parse_tenants)
+        parts = args.workload.split(":")
+        if parts[0] != "closed_loop":
+            raise SystemExit(f"unknown --workload kind {parts[0]!r}")
+        users = int(parts[1]) if len(parts) > 1 else 8
+        think = float(parts[2]) if len(parts) > 2 else 4.0
+        tenants = parse_tenants(args.tenants) if args.tenants else None
+        pool = SessionPool(SessionConfig(
+            users=users, turns=args.turns, think=("exp", think),
+            arrival_rate=args.rate, deadline=args.deadline,
+            vocab=min(cfg.vocab, 250), emit="request"), tenants=tenants)
+        driver = WorkloadDriver(router, pool, record_hit_depth=True)
+        stats = driver.run()
+        workload = pool.summary()
+        stats["workload"] = workload
+    else:
+        trace = synth_trace(args.requests, cfg.vocab, rate=args.rate,
+                            deadline=args.deadline)
+        stats = router.run(trace)
     if fleet is not None:
         stats["fleet"] = fleet.serialize()
     stats["batching"] = ({"max_batch": args.max_batch,
@@ -155,7 +195,7 @@ def main():
     # stable consolidated summary (legacy top-level keys kept for one
     # release — see tests/test_cli.py back-compat assertions)
     stats["telemetry"] = {
-        "schema": 1,
+        "schema": SCHEMA_VERSION,
         "counters": {k: stats.get(k, 0) for k in (
             "completed", "on_time", "missed", "dropped", "merges",
             "merge_rejected", "deferred", "cache_hits", "deadlock_breaks",
@@ -163,6 +203,7 @@ def main():
         "wall": {"mapping_wall_s": stats.get("mapping_wall_s", 0.0),
                  "pruning_wall_s": stats.get("pruning_wall_s", 0.0)},
         "metrics": tel.metrics.snapshot(),
+        "workload": workload,
     }
     if args.trace_out:
         write_chrome_trace(tel.events, args.trace_out,

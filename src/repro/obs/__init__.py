@@ -9,12 +9,14 @@ from .telemetry import NULL, NullTelemetry, Telemetry
 from .exporters import (chrome_trace, write_chrome_trace, write_jsonl,
                         write_metrics)
 from .profiling import KernelProfiler, install, profiled
-from .schema import validate_chrome_trace, validate_metrics_snapshot
+from .schema import (SCHEMA_VERSION, validate_chrome_trace,
+                     validate_metrics_snapshot, validate_telemetry_summary)
 
 __all__ = [
     "MetricsRegistry", "NullMetrics", "StreamingHistogram",
     "NULL", "NullTelemetry", "Telemetry",
     "chrome_trace", "write_chrome_trace", "write_jsonl", "write_metrics",
     "KernelProfiler", "install", "profiled",
-    "validate_chrome_trace", "validate_metrics_snapshot",
+    "SCHEMA_VERSION", "validate_chrome_trace", "validate_metrics_snapshot",
+    "validate_telemetry_summary",
 ]

@@ -16,7 +16,14 @@ from __future__ import annotations
 import json
 import sys
 
-__all__ = ["validate_chrome_trace", "validate_metrics_snapshot"]
+__all__ = ["SCHEMA_VERSION", "validate_chrome_trace",
+           "validate_metrics_snapshot", "validate_telemetry_summary"]
+
+#: version of the consolidated ``stats["telemetry"]`` summary emitted by
+#: ``repro.launch.serve``.  v2 added the optional per-tenant / per-turn
+#: ``workload`` section (closed-loop sessions, DESIGN.md §2.11) and the
+#: ``tenant``-labelled lifecycle metrics.
+SCHEMA_VERSION = 2
 
 _PHASES = {"X", "B", "E", "b", "e", "n", "i", "I", "M", "C"}
 _HIST_KEYS = {"count", "mean", "min", "max", "p50", "p95", "p99"}
@@ -88,12 +95,64 @@ def validate_metrics_snapshot(obj) -> None:
             _fail(f"{p}.count", "negative count")
 
 
+def validate_telemetry_summary(obj) -> None:
+    """Consolidated ``stats["telemetry"]`` summary from the serve CLI.
+
+    Requires ``schema == SCHEMA_VERSION``, numeric ``counters``/``wall``
+    sections and a valid metrics snapshot; the ``workload`` section (when
+    present: closed-loop / staged runs) must carry ``per_turn`` or
+    ``per_stage`` rows plus per-tenant accounting.
+    """
+    if not isinstance(obj, dict):
+        _fail("$", "summary must be a JSON object")
+    if obj.get("schema") != SCHEMA_VERSION:
+        _fail("$.schema", f"expected {SCHEMA_VERSION}, got {obj.get('schema')!r}")
+    for sect in ("counters", "wall"):
+        if not isinstance(obj.get(sect), dict):
+            _fail(f"$.{sect}", "missing or not an object")
+        for name, v in obj[sect].items():
+            if not isinstance(v, (int, float)):
+                _fail(f"$.{sect}[{name!r}]", "value must be a number")
+    validate_metrics_snapshot(obj.get("metrics"))
+    wl = obj.get("workload")
+    if wl is None:
+        return
+    if not isinstance(wl, dict):
+        _fail("$.workload", "must be an object")
+    if not isinstance(wl.get("mode"), str):
+        _fail("$.workload.mode", "missing or not a string")
+    rows = wl.get("per_turn", wl.get("per_stage"))
+    if not isinstance(rows, list) or not rows:
+        _fail("$.workload", "needs a non-empty per_turn or per_stage list")
+    for i, row in enumerate(rows):
+        p = f"$.workload.rows[{i}]"
+        if not isinstance(row, dict):
+            _fail(p, "row must be an object")
+        for k in ("submitted", "completed", "on_time", "dropped"):
+            if not isinstance(row.get(k), (int, float)):
+                _fail(f"{p}.{k}", "missing or not a number")
+    tenants = wl.get("tenants")
+    if not isinstance(tenants, dict) or not tenants:
+        _fail("$.workload.tenants", "missing or empty")
+    for name, t in tenants.items():
+        p = f"$.workload.tenants[{name!r}]"
+        if not isinstance(t, dict):
+            _fail(p, "must be an object")
+        for k in ("submitted", "completed", "on_time", "dropped",
+                  "on_time_rate"):
+            if not isinstance(t.get(k), (int, float)):
+                _fail(f"{p}.{k}", "missing or not a number")
+
+
 def _validate_file(path: str) -> str:
     with open(path) as fh:
         obj = json.load(fh)
     if isinstance(obj, dict) and "traceEvents" in obj:
         validate_chrome_trace(obj)
         return "chrome-trace"
+    if isinstance(obj, dict) and "schema" in obj:
+        validate_telemetry_summary(obj)
+        return "telemetry-summary"
     validate_metrics_snapshot(obj)
     return "metrics-snapshot"
 

@@ -349,6 +349,10 @@ class Router:
         #: routing decision trace: (t, pid, reason) — testable against a
         #: single-plane oracle just like ControlPlane.trace
         self.decisions: list[tuple] = []
+        #: closed-loop workload driver (serving.workload), wired through
+        #: ``attach_workload``: completions wake sessions, drain pumps the
+        #: generator dry instead of assuming a finite pre-known trace
+        self.workload = None
         self.stats = {"submitted": 0, "affinity_hits": 0,
                       "prefix_affinity": 0,
                       "routed": {p.pid: 0 for p in self.planes}}
@@ -406,10 +410,39 @@ class Router:
         for p in self.planes:
             p.cp.run(until=until)
 
+    def next_event_time(self) -> float | None:
+        """Earliest scheduled event instant across the planes, or None —
+        the closed-loop driver paces its pump off this so generator
+        arrivals and plane events interleave in virtual-time order."""
+        ts = [p.cp._events[0][0] for p in self.planes if p.cp._events]
+        return min(ts) if ts else None
+
+    def attach_workload(self, driver) -> None:
+        """Register a closed-loop workload driver: its completion callback
+        is wired through every plane's control plane (session wakeup /
+        staged re-admission), including planes the plane scaler adds
+        later, and ``drain`` gains mid-stream semantics (see below)."""
+        self.workload = driver
+        for p in self.planes:
+            p.cp.on_complete = driver.on_complete
+
     def drain(self) -> dict:
-        """Run every plane to quiescence and aggregate statistics."""
-        for p in self.planes + self.retired:
-            p.cp.run()
+        """Run every plane to quiescence and aggregate statistics.
+
+        With a closed-loop generator attached, per-plane quiescence is not
+        the end of the story: completions processed during the final run
+        wake sessions whose next turns are pending in the *generator's*
+        heap, not in any plane's.  The loop alternates quiescence with
+        pumping those arrivals back through the front door until the
+        generator is exhausted — which is guaranteed: sessions have
+        bounded turns, DAGs bounded stages, and new starts stop at the
+        user cap / horizon — so drain terminates cleanly instead of
+        spinning on an always-refilling arrival heap."""
+        while True:
+            for p in self.planes + self.retired:
+                p.cp.run()
+            if self.workload is None or not self.workload.pump(self):
+                break
         return self.collect_stats()
 
     # -- plane-count autoscaling ----------------------------------------------
@@ -562,6 +595,8 @@ class _PlanePool:
         r.stats["routed"].setdefault(plane.pid, 0)
         if r.tel.enabled:
             r._attach_plane_telemetry(plane)
+        if r.workload is not None:
+            plane.cp.on_complete = r.workload.on_complete
         return 0.0
 
     def shrink(self, now: float) -> bool:

@@ -65,6 +65,11 @@ class Request:
     seed: int = 0
     deadline: float = float("inf")  # engine ticks (10 ms units)
     rid: int = 0
+    # workload identity (serving.workload) — defaults mean open-loop -------
+    tenant: str | None = None      # SLO tier name (obs label via Task)
+    session: int | None = None     # closed-loop session / DAG uid
+    turn: int = 0                  # conversation turn / DAG stage ordinal
+    priority: int = 0              # tenant priority tie-break
     # results ---------------------------------------------------------------
     tokens: list = field(default_factory=list)
     logprobs: float | None = None
@@ -86,7 +91,8 @@ class Request:
         return Task(ttype=self.op, data_id=str(hash(self.prompt)),
                     op=self.op, params=self.params_sig, arrival=arrival,
                     deadline=self.deadline, user=f"u{ordinal % 8}",
-                    tokens=self.prompt)
+                    priority=self.priority, tokens=self.prompt,
+                    tenant=self.tenant, session=self.session, turn=self.turn)
 
 
 # ---------------------------------------------------------------------------

@@ -86,7 +86,7 @@ def test_serve_cli_telemetry_out(tmp_path):
                 "--events-out", str(events)])
     stats = json.loads(out)
     tel = stats["telemetry"]
-    assert tel["schema"] == 1
+    assert tel["schema"] == 2
     # every consolidated counter mirrors its legacy top-level twin
     for k, v in tel["counters"].items():
         assert stats.get(k, 0) == v, k
@@ -98,6 +98,36 @@ def test_serve_cli_telemetry_out(tmp_path):
     validate_metrics_snapshot(json.loads(metrics.read_text()))
     ev = [json.loads(line) for line in events.read_text().splitlines()]
     assert ev and all("t" in e and "kind" in e for e in ev)
+
+
+def test_serve_cli_closed_loop():
+    """--workload closed_loop drives the cluster with multi-turn sessions;
+    the JSON summary carries per-turn and per-tenant counters and the
+    consolidated telemetry validates against schema 2."""
+    from repro.obs import validate_telemetry_summary
+
+    out = _run(["repro.launch.serve", "--workload", "closed_loop:6:2",
+                "--turns", "3", "--tenants", "gold:1:0.5:1,free:3",
+                "--units", "1", "--rate", "0.5"])
+    stats = json.loads(out)
+    wl = stats["workload"]
+    assert wl["mode"] == "closed_loop"
+    assert wl["sessions_done"] == 6
+    turns = wl["per_turn"]
+    assert [r["turn"] for r in turns] == [0, 1, 2]
+    assert all(r["submitted"] == 6 for r in turns)
+    assert sum(r["completed"] for r in turns) == stats["completed"]
+    tenants = wl["tenants"]
+    assert set(tenants) == {"gold", "free"}
+    assert sum(t["submitted"] for t in tenants.values()) == 18
+    for t in tenants.values():
+        assert 0.0 <= t["on_time_rate"] <= 1.0
+    # the same summary rides inside telemetry and passes the schema check
+    assert stats["telemetry"]["workload"] == wl
+    validate_telemetry_summary(stats["telemetry"])
+    # tenant labels reach the exported metrics
+    counters = stats["telemetry"]["metrics"]["counters"]
+    assert any(k.startswith("tenant_completed{") for k in counters)
 
 
 def test_serve_smse_example_trace_out(tmp_path):

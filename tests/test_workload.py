@@ -1,0 +1,491 @@
+"""Closed-loop session workload subsystem (DESIGN.md §2.11): arrival
+processes, multi-turn session pools, staged DAGs with residual-slack
+propagation, per-tenant SLO accounting, the driver pump, and the
+drain-termination bugfix.  Stub execution except the prefix-reuse
+acceptance class at the bottom (compiled tiny model)."""
+
+import numpy as np
+import pytest
+
+from repro.core.simulation import PETOracle, SimConfig, Simulator
+from repro.core.tasks import Machine, PETMatrix
+from repro.core.workload import spiky_hc_workload, video_streaming_workload
+from repro.serving.cluster import Plane, Router
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.workload import (BurstyProcess, DiurnalProcess,
+                                    PoissonProcess, SessionConfig,
+                                    SessionPool, SpikeSchedule, Stage,
+                                    StagedConfig, StagedPool, TenantSpec,
+                                    WorkloadDriver, mix64, parse_tenants,
+                                    sample_think, unit_float)
+
+
+def _pet(seed=3, mean_range=(8, 16)):
+    rng = np.random.default_rng(seed)
+    return PETMatrix.generate(["generate"], ["m0"], rng,
+                              mean_range=mean_range)
+
+
+def _stub_engine(pet, n_units=2, **cfg_kw):
+    cfg_kw.setdefault("heuristic", "EDF")
+    cfg_kw.setdefault("merging", "adaptive")
+    return ServingEngine(None, None, EngineConfig(
+        n_units=n_units, elasticity=None,
+        result_cache=False, prefix_cache=False, **cfg_kw),
+        stub_oracle=PETOracle(pet, seed=11))
+
+
+_TENANTS = [TenantSpec("gold", share=0.3, slack=0.6, priority=1),
+            TenantSpec("free", share=0.7, slack=1.2)]
+
+
+# ---------------------------------------------------------------------------
+# arrival processes + the deterministic draw primitive
+# ---------------------------------------------------------------------------
+
+class TestArrivals:
+    def test_splitmix_draws_are_pure(self):
+        """Every (seed, uid, turn) draw is order-independent: same inputs,
+        same value, regardless of when it is evaluated."""
+        assert mix64(7, 3, 1) == mix64(7, 3, 1)
+        assert mix64(7, 3, 1) != mix64(7, 3, 2)
+        us = [unit_float(0, i, 0) for i in range(2000)]
+        assert all(0.0 <= u < 1.0 for u in us)
+        assert 0.4 < sum(us) / len(us) < 0.6        # roughly uniform
+
+    def test_sample_think_forms(self):
+        assert sample_think(("const", 3.0), 0.5, 0.5) == 3.0
+        u = sample_think(("uniform", 2.0, 8.0), 0.25, 0.0)
+        assert 2.0 <= u <= 8.0
+        e = sample_think(("exp", 4.0), 0.5, 0.0)
+        assert e > 0.0
+        ln = sample_think(("lognorm", 5.0, 0.5), 0.3, 0.7)
+        assert ln > 0.0
+
+    def test_poisson_iter_deterministic(self):
+        a, b = PoissonProcess(), PoissonProcess()
+        it1 = a.iter_times(np.random.default_rng(5), 0.5)
+        it2 = b.iter_times(np.random.default_rng(5), 0.5)
+        t1 = [next(it1) for _ in range(50)]
+        t2 = [next(it2) for _ in range(50)]
+        assert t1 == t2
+        assert t1 == sorted(t1) and t1[0] > 0.0
+
+    def test_diurnal_weight_shape(self):
+        p = DiurnalProcess(cycle=100.0, peaks=((0.0, 25.0),), high=2.0)
+        assert p.weight(10.0) == 2.0        # inside the high window
+        assert p.weight(60.0) == 1.0        # base period
+        assert p.weight(110.0) == 2.0       # periodic
+        assert p.peak == 2.0
+
+    def test_two_peak_diurnal(self):
+        p = DiurnalProcess.two_peak(cycle=100.0)
+        highs = [t for t in range(100) if p.weight(float(t)) > 1.0]
+        assert highs                        # both peaks present
+        # thinning respects the envelope: all accepted times exist
+        times = list(_take(p.iter_times(np.random.default_rng(0), 1.0), 200))
+        assert times == sorted(times)
+
+    def test_bursty_and_spike_schedule(self):
+        b = BurstyProcess(windows=((10.0, 20.0),), high=4.0)
+        assert b.weight(15.0) == 4.0 and b.weight(5.0) == 1.0
+        rng = np.random.default_rng(2)
+        sched = SpikeSchedule.sample(rng, ["t0", "t1"], span=100.0)
+        for key in ("t0", "t1"):
+            ws = {sched.weight(key, float(t)) for t in range(100)}
+            assert 4.0 in ws and 1.0 in ws  # spikes over a base rate
+        assert sched.process("t0").weight(0.0) in (1.0, 4.0)
+
+
+def _take(it, n):
+    for _ in range(n):
+        yield next(it)
+
+
+# ---------------------------------------------------------------------------
+# re-hosted Chapter 4/5 generators (back-compat wrappers)
+# ---------------------------------------------------------------------------
+
+class TestGenerators:
+    def test_video_workload_deterministic(self):
+        w1 = video_streaming_workload(80, seed=3)
+        w2 = video_streaming_workload(80, seed=3)
+        assert [t.arrival for t in w1.tasks] == [t.arrival for t in w2.tasks]
+        assert [t.key_task_level() for t in w1.tasks] == \
+            [t.key_task_level() for t in w2.tasks]
+        assert len(w1.tasks) == 80 and w1.span == 600.0
+
+    def test_hc_workload_deterministic(self):
+        w1 = spiky_hc_workload(60, seed=11)
+        w2 = spiky_hc_workload(60, seed=11)
+        assert [t.arrival for t in w1.tasks] == [t.arrival for t in w2.tasks]
+        assert [(t.ttype, t.deadline) for t in w1.tasks] == \
+            [(t.ttype, t.deadline) for t in w2.tasks]
+        assert [t.arrival for t in w1.tasks] == \
+            sorted(t.arrival for t in w1.tasks)
+        assert len(w1.machines) == 8
+
+
+# ---------------------------------------------------------------------------
+# tenancy
+# ---------------------------------------------------------------------------
+
+class TestTenancy:
+    def test_parse_tenants(self):
+        ts = parse_tenants("gold:1:0.5:1,free:3")
+        assert [t.name for t in ts] == ["gold", "free"]
+        assert ts[0].slack == 0.5 and ts[0].priority == 1
+        assert ts[1].share == 3.0 and ts[1].slack == 1.0
+
+    def test_share_split_is_deterministic(self):
+        pool = SessionPool(SessionConfig(users=400, turns=1, seed=5),
+                           tenants=_TENANTS)
+        names = [pool._tenant(uid).name for uid in range(400)]
+        gold = names.count("gold")
+        assert 0.2 < gold / 400 < 0.4            # ~30% share
+        assert names == [pool._tenant(uid).name for uid in range(400)]
+
+
+# ---------------------------------------------------------------------------
+# session pool semantics (no substrate)
+# ---------------------------------------------------------------------------
+
+class TestSessionPool:
+    def test_prompt_prefix_invariant(self):
+        """prompt(uid, k) extends prompt(uid, k-1) exactly — the invariant
+        that makes multi-turn traffic exercise the prefix KV cache."""
+        pool = SessionPool(SessionConfig(users=4, turns=5, seed=9))
+        for uid in range(4):
+            prev = pool.prompt(uid, 0)
+            assert len(prev) == pool.cfg.base_prompt
+            for k in range(1, 5):
+                cur = pool.prompt(uid, k)
+                assert cur[:len(prev)] == prev
+                assert len(cur) == len(prev) + \
+                    pool.cfg.n_new + pool.cfg.followup
+                prev = cur
+        # distinct users get distinct conversations
+        assert pool.prompt(0, 2) != pool.prompt(1, 2)
+
+    def test_pop_streams_starts_deterministically(self):
+        def turn0(seed):
+            pool = SessionPool(SessionConfig(users=10, turns=3, seed=seed))
+            out = []
+            while pool.pending():
+                t, item = pool.pop()
+                out.append((t, item.session, item.turn, item.prompt))
+            return out
+
+        a, b = turn0(4), turn0(4)
+        assert a == b
+        assert [x[2] for x in a] == [0] * 10     # only turn 0 without wakes
+        assert turn0(5) != a
+
+    def test_wakeup_rearrives_with_grown_prefix(self):
+        pool = SessionPool(SessionConfig(users=1, turns=2, seed=1,
+                                         think=("const", 3.0)))
+        t0, item0 = pool.pop()
+        assert pool.in_flight() == 1 and not pool.pending()
+        pool.on_complete(item0, t0 + 5.0, "done")
+        assert pool.pending()
+        t1, item1 = pool.pop()
+        assert t1 == t0 + 5.0 + 3.0              # completion + think time
+        assert item1.turn == 1
+        assert item1.prompt[:len(item0.prompt)] == item0.prompt
+
+    def test_drop_aborts_session_by_default(self):
+        pool = SessionPool(SessionConfig(users=1, turns=4, seed=1))
+        t0, item0 = pool.pop()
+        pool.on_complete(item0, t0 + 1.0, "dropped")
+        assert not pool.pending() and pool.sessions_done == 1
+        s = pool.summary()
+        assert s["per_turn"][0]["dropped"] == 1
+        assert s["tenants"]["default"]["dropped"] == 1
+
+    def test_stale_completion_ignored(self):
+        """Duplicate completion callbacks (merged compounds fan out per
+        request) must not double-advance a session."""
+        pool = SessionPool(SessionConfig(users=1, turns=3, seed=1))
+        t0, item0 = pool.pop()
+        pool.on_complete(item0, t0 + 1.0, "done")
+        n_wake = len(pool._wake)
+        pool.on_complete(item0, t0 + 2.0, "done")    # stale duplicate
+        assert len(pool._wake) == n_wake
+        assert pool.summary()["per_turn"][0]["completed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# staged DAGs: residual-slack propagation
+# ---------------------------------------------------------------------------
+
+class TestStagedDAG:
+    def test_stage_deadlines_carve_out_tail_estimates(self):
+        """Stage i's admitted deadline is D - tail_est(i): earlier stages
+        get earlier deadlines, the final stage gets the DAG deadline."""
+        stages = (Stage(est=10.0), Stage(est=20.0), Stage(est=30.0))
+        pool = StagedPool(StagedConfig(dags=1, stages=stages, slack=2.0,
+                                       seed=3))
+        assert pool.critical_path == 60.0
+        assert pool.tails == [50.0, 30.0, 0.0]
+        t0, item0 = pool.pop()
+        D = pool._state[0]["deadline"]
+        assert D == pytest.approx(t0 + 2.0 * 60.0)
+        assert item0.deadline == pytest.approx(D - 50.0)
+
+    def test_late_predecessor_shrinks_residual_slack(self):
+        """The deadline is absolute: a slow stage 0 eats exactly its
+        overrun out of stage 1's admission slack — the pruner sees the
+        true remaining budget."""
+        stages = (Stage(est=10.0), Stage(est=10.0))
+        pool = StagedPool(StagedConfig(dags=1, stages=stages, slack=2.0,
+                                       seed=3))
+        t0, item0 = pool.pop()
+        D = pool._state[0]["deadline"]
+        pool.on_complete(item0, t0 + 35.0, "done")   # way past its est
+        t1, item1 = pool.pop()
+        assert t1 == t0 + 35.0                       # admitted at completion
+        assert item1.deadline == pytest.approx(D)    # absolute, not reset
+        slack1 = item1.deadline - t1
+        assert slack1 == pytest.approx(2.0 * 20.0 - 35.0)
+        s = pool.summary()
+        assert s["per_stage"][1]["mean_slack_at_admit"] == \
+            pytest.approx(slack1)
+
+    def test_fan_in_waits_for_all_predecessors(self):
+        """A join stage is admitted only when every prerequisite is done,
+        at the last completion instant."""
+        stages = (Stage(est=10.0, after=()), Stage(est=10.0, after=()),
+                  Stage(est=10.0, after=(0, 1)))
+        pool = StagedPool(StagedConfig(dags=1, stages=stages, seed=3))
+        t0, a = pool.pop()          # root 0
+        tb, b = pool.pop()          # root 1, ready at the same instant
+        assert tb == t0 and {a.turn, b.turn} == {0, 1}
+        pool.on_complete(a, t0 + 5.0, "done")
+        assert not pool.pending()   # join still blocked on root 1
+        pool.on_complete(b, t0 + 9.0, "done")
+        tj, j = pool.pop()
+        assert tj == t0 + 9.0 and j.turn == 2
+
+    def test_drop_aborts_descendants(self):
+        pool = StagedPool(StagedConfig(dags=1, seed=3))
+        t0, item0 = pool.pop()
+        pool.on_complete(item0, t0 + 1.0, "dropped")
+        assert not pool.pending()
+        s = pool.summary()
+        assert s["dags_aborted"] == 1 and s["dags_done"] == 0
+        assert s["per_stage"][1]["submitted"] == 0
+
+    def test_staged_end_to_end_on_stub_engine(self):
+        pet = _pet()
+        eng = _stub_engine(pet, n_units=2)
+        router = Router([Plane(eng, pid=0)], policy="round-robin",
+                        shared_detector=False)
+        pool = StagedPool(StagedConfig(dags=6, arrival_rate=0.3, slack=4.0,
+                                       seed=7), tenants=_TENANTS)
+        stats = WorkloadDriver(router, pool).run()
+        s = pool.summary()
+        assert s["dags_done"] + s["dags_aborted"] == 6
+        assert s["dags_done"] > 0
+        submitted = sum(r["submitted"] for r in s["per_stage"])
+        assert stats["completed"] + stats["dropped"] == submitted
+        # stages were admitted in dependency order for every DAG
+        assert s["per_stage"][0]["submitted"] >= \
+            s["per_stage"][1]["submitted"] >= s["per_stage"][2]["submitted"]
+
+
+# ---------------------------------------------------------------------------
+# closed loop on the stub engine + the drain-termination bugfix
+# ---------------------------------------------------------------------------
+
+class TestClosedLoopStubEngine:
+    def test_sessions_run_to_completion(self):
+        pet = _pet()
+        eng = _stub_engine(pet)
+        router = Router([Plane(eng, pid=0)], policy="round-robin",
+                        shared_detector=False)
+        pool = SessionPool(SessionConfig(users=10, turns=3, arrival_rate=0.4,
+                                         deadline=150.0, seed=7), _TENANTS)
+        stats = WorkloadDriver(router, pool).run()
+        s = pool.summary()
+        assert s["sessions_done"] == 10
+        submitted = sum(r["submitted"] for r in s["per_turn"])
+        assert stats["completed"] + stats["dropped"] == submitted
+        assert s["per_turn"][0]["submitted"] == 10
+        # tenant accounting is complete and consistent
+        tens = s["tenants"]
+        assert sum(t["submitted"] for t in tens.values()) == submitted
+        for t in tens.values():
+            assert t["completed"] + t["dropped"] <= t["submitted"]
+            assert 0.0 <= t["on_time_rate"] <= 1.0
+
+    def test_tenant_labels_reach_metrics(self):
+        from repro.obs import Telemetry
+        pet = _pet()
+        eng = _stub_engine(pet)
+        tel = Telemetry()
+        router = Router([Plane(eng, pid=0)], policy="round-robin",
+                        shared_detector=False, telemetry=tel)
+        pool = SessionPool(SessionConfig(users=6, turns=2, arrival_rate=0.4,
+                                         deadline=150.0, seed=7), _TENANTS)
+        WorkloadDriver(router, pool).run()
+        snap = tel.metrics.snapshot()
+        tenant_counters = [k for k in snap["counters"]
+                           if k.startswith("tenant_completed{")]
+        assert tenant_counters
+        done = sum(snap["counters"][k] for k in tenant_counters)
+        assert done == sum(t["completed"]
+                           for t in pool.summary()["tenants"].values())
+        # lifecycle events carry the tenant attribute
+        tenants_seen = {e.get("tenant") for e in tel.events
+                        if e["kind"] == "complete"}
+        assert tenants_seen <= {"gold", "free"} and tenants_seen
+
+    def test_drain_pumps_generator_dry(self):
+        """The bugfix: Router.drain() with a closed-loop generator attached
+        must alternate quiescence with generator pumping until the pool is
+        exhausted — not return with sessions mid-flight, and not spin."""
+        pet = _pet()
+        eng = _stub_engine(pet)
+        router = Router([Plane(eng, pid=0)], policy="round-robin",
+                        shared_detector=False)
+        pool = SessionPool(SessionConfig(users=8, turns=3, arrival_rate=0.5,
+                                         think=("const", 50.0),
+                                         deadline=200.0, seed=2))
+        WorkloadDriver(router, pool)      # attach without running the pump
+        stats = router.drain()            # drain alone must finish the work
+        assert pool.sessions_done == 8
+        assert pool.in_flight() == 0 and not pool.pending()
+        assert stats["completed"] + stats["dropped"] == \
+            sum(r["submitted"] for r in pool.summary()["per_turn"])
+
+    def test_drain_without_workload_unchanged(self):
+        pet = _pet()
+        eng = _stub_engine(pet)
+        router = Router([Plane(eng, pid=0)], policy="round-robin",
+                        shared_detector=False)
+        from repro.serving.engine import Request
+        router.submit(Request(prompt=(1, 2, 3, 4), op="generate", n_new=2,
+                              deadline=100.0), 0.0)
+        stats = router.drain()
+        assert stats["completed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# sim <-> engine decision equivalence with sessions ON
+# ---------------------------------------------------------------------------
+
+class TestSessionEquivalence:
+    def test_sim_matches_stub_engine_closed_loop(self):
+        """The closed loop preserves the cross-substrate acceptance
+        criterion: the same SessionPool config driving a simulator plane
+        and a stub-engine plane yields identical decision traces."""
+        pet = _pet()
+
+        def make_pool():
+            return SessionPool(SessionConfig(
+                users=12, turns=4, arrival_rate=0.4,
+                think=("uniform", 2.0, 6.0), deadline=150.0, seed=7),
+                _TENANTS)
+
+        eng = _stub_engine(pet)
+        eng.cp.trace = []
+        r1 = Router([Plane(eng, pid=0)], policy="round-robin",
+                    shared_detector=False)
+        d1 = WorkloadDriver(r1, make_pool())
+        s1 = d1.run()
+
+        sim = Simulator([], [Machine(mid=i) for i in range(2)],
+                        PETOracle(pet, seed=11),
+                        SimConfig(heuristic="EDF", merging="adaptive"))
+        sim.cp.trace = []
+        r2 = Router([Plane(sim, pid=0)], policy="round-robin",
+                    shared_detector=False)
+        d2 = WorkloadDriver(r2, make_pool())
+        s2 = d2.run()
+
+        assert eng.cp.trace and eng.cp.trace == sim.cp.trace
+        assert d1.pool.sessions_done == d2.pool.sessions_done == 12
+        assert s1["completed"] == s2["completed"]
+        assert d1.pool.summary()["tenants"] == d2.pool.summary()["tenants"]
+
+
+# ---------------------------------------------------------------------------
+# bounded memory at scale (simulator fast path)
+# ---------------------------------------------------------------------------
+
+class TestScale:
+    def test_active_sessions_bounded_far_below_users(self):
+        """The streaming pool holds per-session state only while a session
+        is in flight or thinking: peak_active_sessions stays a small
+        fraction of the user population."""
+        users = 3000
+        pet = _pet(mean_range=(1, 2))
+        sim = Simulator([], [Machine(mid=i, queue_size=64)
+                             for i in range(8)],
+                        PETOracle(pet, seed=11),
+                        SimConfig(heuristic="EDF", merging="none"))
+        router = Router([Plane(sim, pid=0)], policy="round-robin",
+                        shared_detector=False)
+        pool = SessionPool(SessionConfig(
+            users=users, turns=2, arrival_rate=3.0, think=("const", 0.5),
+            deadline=500.0, emit="task", n_new=1, seed=1))
+        WorkloadDriver(router, pool).run()
+        s = pool.summary()
+        assert s["users"] == users and s["sessions_done"] == users
+        assert s["peak_active_sessions"] < users / 4
+
+
+# ---------------------------------------------------------------------------
+# prefix-reuse acceptance on the live engine (compiled tiny model)
+# ---------------------------------------------------------------------------
+
+class TestLiveEnginePrefixReuse:
+    @pytest.fixture(scope="class")
+    def model(self):
+        import jax
+        from repro.configs.registry import ARCHS
+        from repro.models import transformer as T
+        cfg = ARCHS["smollm-360m"].reduced().scaled(
+            n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+            vocab=256, head_dim=32, remat=False)
+        return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+    def _run(self, model, users, turns):
+        cfg, params = model
+        eng = ServingEngine(cfg, params, EngineConfig(
+            n_units=1, elasticity=None, result_cache=False,
+            prefix_cache=True, heuristic="EDF", merging="none",
+            max_len=64, kv_block_size=4))
+        router = Router([Plane(eng, pid=0)], policy="round-robin",
+                        shared_detector=False)
+        pool = SessionPool(SessionConfig(
+            users=users, turns=turns, arrival_rate=0.2,
+            think=("uniform", 5.0, 10.0), deadline=500.0, vocab=250,
+            seed=7))
+        stats = WorkloadDriver(router, pool, record_hit_depth=True).run()
+        return stats, pool.summary()
+
+    def test_turn_hit_depth_monotone_and_positive(self, model):
+        """Acceptance: turn k's prefix hit depth >= turn k-1's for the
+        multi-turn sessions, strictly positive once the cache is warm —
+        each turn re-arrives with the grown prefix and finds the previous
+        turn's KV blocks."""
+        stats, s = self._run(model, users=3, turns=4)
+        assert s["sessions_done"] == 3
+        depths = [r["mean_hit_depth"] for r in s["per_turn"]]
+        assert depths[0] == 0.0                  # cold start
+        assert all(b >= a for a, b in zip(depths, depths[1:]))
+        assert depths[-1] > 0.0
+        assert stats["prefix_hits"] > 0
+        assert stats["prefix_tokens_reused"] > 0
+
+    def test_multi_turn_beats_single_shot_baseline(self, model):
+        """Acceptance: the closed-loop multi-turn hit rate is strictly
+        above the single-shot baseline (same arrival volume, turns=1:
+        per-user prompts never repeat, so the prefix cache cannot help)."""
+        multi, _ = self._run(model, users=3, turns=3)
+        single, _ = self._run(model, users=9, turns=1)
+        multi_rate = multi["prefix_hits"] / max(1, multi["executions"])
+        single_rate = single["prefix_hits"] / max(1, single["executions"])
+        assert multi_rate > single_rate
+        assert single["prefix_hits"] == 0
