@@ -295,6 +295,41 @@ def sessions_table(path="../BENCH_serving.json"):
     return "\n".join(out)
 
 
+def calibration_table(path="../BENCH_serving.json"):
+    """Record -> fit -> replay calibration loop: per-stage latency drift and
+    decision agreement for the stub-oracle control, the telemetry-fitted
+    replay, and the live-engine recording (DESIGN.md §2.12;
+    benchmarks/serving.py::calibration)."""
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return "(run `python -m benchmarks.run --only serving` first)"
+    rows = json.load(open(p)).get("calibration_rows", [])
+    if not rows:
+        return "(re-run `python -m benchmarks.run --only serving`: " \
+               "no calibration_rows in BENCH_serving.json)"
+    head = ["source", "stage", "recorded mean", "replayed mean", "drift %",
+            "scored"]
+    out = ["| " + " | ".join(head) + " |", "|" + "---|" * len(head)]
+    summaries = {}
+    for r in rows:
+        if r["stage"] == "summary":
+            summaries[r["source"]] = r
+            continue
+        out.append("| " + " | ".join(str(c) for c in (
+            r["source"], r["stage"], f"{r['recorded_mean']:.3f}",
+            f"{r['replayed_mean']:.3f}", f"{r['drift_pct']:.2f}",
+            "yes" if r["scored"] else "no")) + " |")
+    for tag, s in summaries.items():
+        verdict = ("decisions match exactly" if s["decisions_match"]
+                   else "decisions DIVERGE")
+        out.append(
+            f"\n{tag}: max scored-stage drift "
+            f"{s['max_stage_drift_pct']:.2f}% — {verdict} "
+            f"(completed gap {s['completed_gap']:+d}, "
+            f"dropped gap {s['dropped_gap']:+d})")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     cur = load("dryrun.jsonl")
     base = load("dryrun_baseline.jsonl")
@@ -329,3 +364,6 @@ if __name__ == "__main__":
     print("\n## §Sessions — closed-loop users, staged DAGs, SLO tiers "
           "(million-user streaming + live-engine prefix gain)\n")
     print(sessions_table())
+    print("\n## §Calibration — record -> fit -> replay drift "
+          "(stub control + telemetry-fitted oracles)\n")
+    print(calibration_table())

@@ -34,7 +34,17 @@ multi-turn conversation whose next turn re-arrives after a think time,
 with the grown token prefix exercising the prefix KV cache.
 ``--tenants gold:1:0.5:1,free:3`` splits users over SLO tiers
 (name:share:slack:priority); per-tenant and per-turn counters ride under
-``workload`` in the JSON summary (telemetry schema 2).
+``workload`` in the JSON summary (telemetry schema 2).  With tenants set,
+a per-tenant SLO burn-rate monitor (DESIGN.md §2.12) runs online,
+subscribes every engine's autoscaler to its burn signal, and its summary
+rides under ``telemetry.slo``.
+
+``--record-out FILE`` swaps the telemetry recorder for a flight recorder
+(DESIGN.md §2.12): the bounded event ring, every arrival payload,
+periodic ``TimeEstimator`` EWMA snapshots and the kernel-profiler
+compile/execute split are serialized into one replayable artifact —
+``obs.fit.fit_oracle`` turns it into a measured oracle and
+``obs.replay.drift_report`` re-drives it through the simulator.
 """
 
 from __future__ import annotations
@@ -50,7 +60,8 @@ from ..configs.registry import get_arch
 from ..core.fleet import FleetSpec
 from ..core.pruning import PruningConfig
 from ..models import transformer as T
-from ..obs import (SCHEMA_VERSION, Telemetry, write_chrome_trace,
+from ..obs import (SCHEMA_VERSION, FlightRecorder, KernelProfiler,
+                   SLOMonitor, Telemetry, install, write_chrome_trace,
                    write_jsonl, write_metrics)
 from ..serving.autoscale import SCALER_POLICIES, ElasticityConfig
 from ..serving.batching import StepBatchingConfig
@@ -133,6 +144,12 @@ def main():
                          "Prometheus text, anything else JSON)")
     ap.add_argument("--events-out", default=None,
                     help="write the raw telemetry event log as JSONL here")
+    ap.add_argument("--record-out", default=None,
+                    help="write a replayable flight-record artifact here "
+                         "(bounded event ring + arrivals + estimator "
+                         "snapshots + kernel profile; DESIGN.md §2.12)")
+    ap.add_argument("--record-capacity", type=int, default=65536,
+                    help="flight-recorder ring size in events")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced().scaled(n_layers=2, remat=False)
@@ -161,10 +178,43 @@ def main():
         plane_factory = make_engine_plane_factory(
             cfg, params, ecfg, warm_fns=planes[0].sub.warm_fns)
     # telemetry rides on every run: the engine's tick clock stamps ``t``
-    # and perf_counter stamps ``wall`` (the tick+wall clock pair)
-    tel = Telemetry(wall_clock=time.perf_counter)
+    # and perf_counter stamps ``wall`` (the tick+wall clock pair).  With
+    # --record-out the recorder is a flight recorder — same Telemetry
+    # surface, so nothing downstream changes (zero perturbation)
+    recorder = None
+    if args.record_out:
+        tel = recorder = FlightRecorder(capacity=args.record_capacity,
+                                        wall_clock=time.perf_counter,
+                                        snapshot_interval=200.0)
+        recorder.watch_estimator(planes[0].sub.estimator)
+        recorder.note_engine_config(ecfg)
+        recorder.meta.update({"arch": args.arch, "planes": args.planes,
+                              "time_scale": float(TICKS_PER_SEC)})
+        profiler = KernelProfiler(metrics=tel.metrics)
+        install(profiler)
+        recorder.use_profiler(profiler)
+    else:
+        tel = Telemetry(wall_clock=time.perf_counter)
     router = Router(planes, policy=args.router, autoscale=autoscale,
                     plane_factory=plane_factory, telemetry=tel)
+    if recorder is not None:
+        # capture every arrival payload at the front door (replay input)
+        _submit = router.submit
+
+        def submit(item, t):
+            recorder.note_arrival(t, item)
+            return _submit(item, t)
+
+        router.submit = submit
+    slo = None
+    if args.tenants:
+        from ..serving.workload import parse_tenants as _pt
+        slo = SLOMonitor(_pt(args.tenants), tel)
+        slo.attach(planes[0].sub)
+        for plane in planes:
+            scaler = getattr(plane.sub, "scaler", None)
+            if scaler is not None:
+                scaler.attach_slo(slo)
     workload = None
     if args.workload:
         from ..serving.workload import (SessionConfig, SessionPool,
@@ -205,6 +255,15 @@ def main():
         "metrics": tel.metrics.snapshot(),
         "workload": workload,
     }
+    if slo is not None:
+        stats["telemetry"]["slo"] = slo.summary()
+    if recorder is not None:
+        now = max((p.cp.now for p in planes), default=0.0)
+        recorder.snapshot_estimator(now, planes[0].sub.estimator)
+        recorder.note_machines([m for p in planes for m in p.sub.machines])
+        recorder.note_stats(stats)
+        recorder.save(args.record_out)
+        stats["telemetry"]["record_out"] = args.record_out
     if args.trace_out:
         write_chrome_trace(tel.events, args.trace_out,
                            us_per_unit=1e6 / TICKS_PER_SEC)

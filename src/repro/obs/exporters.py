@@ -21,9 +21,10 @@ substrates produce overlay-comparable timelines.
 from __future__ import annotations
 
 import json
+import re
 
 __all__ = ["write_jsonl", "chrome_trace", "write_chrome_trace",
-           "write_metrics"]
+           "write_metrics", "parse_prometheus"]
 
 # event kinds that open/close a request's async lifecycle span
 _OPEN = {"arrive"}
@@ -43,6 +44,14 @@ def write_jsonl(events, path) -> None:
 
 def _args(ev: dict) -> dict:
     return {k: v for k, v in ev.items() if k not in ("t", "kind", "wall")}
+
+
+def _req_name(ev: dict) -> str:
+    """Lifecycle span label; tenant-labelled traffic (PR 8) keeps its tier
+    visible in the Perfetto track, e.g. ``req 5 [gold]``."""
+    name = f"req {ev.get('req')}"
+    tenant = ev.get("tenant")
+    return f"{name} [{tenant}]" if tenant else name
 
 
 def chrome_trace(events, us_per_unit: float = 1e6) -> dict:
@@ -76,14 +85,14 @@ def chrome_trace(events, us_per_unit: float = 1e6) -> dict:
             })
         elif kind in _OPEN:
             trace.append({
-                "name": f"req {ev.get('req')}",
+                "name": _req_name(ev),
                 "ph": "b", "cat": "request", "id": int(ev.get("req", 0)),
                 "pid": pid, "tid": _CONTROL_TID, "ts": ts(ev),
                 "args": _args(ev),
             })
         elif kind in _CLOSE:
             trace.append({
-                "name": f"req {ev.get('req')}",
+                "name": _req_name(ev),
                 "ph": "e", "cat": "request", "id": int(ev.get("req", 0)),
                 "pid": pid, "tid": _CONTROL_TID, "ts": ts(ev),
                 "args": _args(ev),
@@ -122,3 +131,28 @@ def write_metrics(metrics, path) -> None:
         body = json.dumps(metrics.snapshot(), indent=2, sort_keys=True)
     with open(path, "w") as fh:
         fh.write(body)
+
+
+_LABEL_RE = re.compile(r'([A-Za-z_][A-Za-z0-9_]*)="([^"]*)"')
+
+
+def parse_prometheus(text: str) -> dict:
+    """Inverse of ``MetricsRegistry.to_prometheus`` for round-trip tests:
+    ``{(name, ((label, value), ...)): float}``.  Label sets are sorted
+    tuples, so per-tenant series are addressable as
+    ``out[("tenant_completed", (("tenant", "gold"),))]``."""
+    out: dict = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        head, _, val = line.rpartition(" ")
+        if not head:
+            continue
+        if "{" in head:
+            name, _, rest = head.partition("{")
+            labels = tuple(sorted(_LABEL_RE.findall(rest)))
+        else:
+            name, labels = head, ()
+        out[(name, labels)] = float(val)
+    return out

@@ -17,13 +17,17 @@ import json
 import sys
 
 __all__ = ["SCHEMA_VERSION", "validate_chrome_trace",
-           "validate_metrics_snapshot", "validate_telemetry_summary"]
+           "validate_metrics_snapshot", "validate_telemetry_summary",
+           "validate_slo_alert", "validate_drift_report",
+           "validate_flight_record"]
 
 #: version of the consolidated ``stats["telemetry"]`` summary emitted by
 #: ``repro.launch.serve``.  v2 added the optional per-tenant / per-turn
 #: ``workload`` section (closed-loop sessions, DESIGN.md §2.11) and the
-#: ``tenant``-labelled lifecycle metrics.
-SCHEMA_VERSION = 2
+#: ``tenant``-labelled lifecycle metrics.  v3 adds the observability-loop
+#: artifacts (DESIGN.md §2.12): ``flight_record`` (obs.recorder),
+#: ``drift_report`` (obs.replay) and ``slo_alert`` events (obs.slo).
+SCHEMA_VERSION = 3
 
 _PHASES = {"X", "B", "E", "b", "e", "n", "i", "I", "M", "C"}
 _HIST_KEYS = {"count", "mean", "min", "max", "p50", "p95", "p99"}
@@ -144,12 +148,119 @@ def validate_telemetry_summary(obj) -> None:
                 _fail(f"{p}.{k}", "missing or not a number")
 
 
+def validate_slo_alert(ev) -> None:
+    """One ``slo_alert`` telemetry event (obs.slo), as a plain dict."""
+    if not isinstance(ev, dict):
+        _fail("$", "slo_alert must be an object")
+    if ev.get("kind", "slo_alert") != "slo_alert":
+        _fail("$.kind", f"expected 'slo_alert', got {ev.get('kind')!r}")
+    if not isinstance(ev.get("t"), (int, float)):
+        _fail("$.t", "missing or not a number")
+    if not isinstance(ev.get("tenant"), str):
+        _fail("$.tenant", "missing or not a string")
+    burn = ev.get("burn")
+    if not isinstance(burn, (int, float)) or burn < 0:
+        _fail("$.burn", "missing or negative")
+    obj = ev.get("objective")
+    if not isinstance(obj, (int, float)) or not 0.0 < obj <= 1.0:
+        _fail("$.objective", "must be in (0, 1]")
+    err = ev.get("error_rate")
+    if not isinstance(err, (int, float)) or not 0.0 <= err <= 1.0:
+        _fail("$.error_rate", "must be in [0, 1]")
+    win = ev.get("window")
+    if not isinstance(win, (int, float)) or win <= 0:
+        _fail("$.window", "must be a positive number")
+
+
+def validate_drift_report(obj) -> None:
+    """Replay divergence report emitted by ``obs.replay.drift_report``."""
+    if not isinstance(obj, dict):
+        _fail("$", "report must be a JSON object")
+    if obj.get("kind") != "drift_report":
+        _fail("$.kind", f"expected 'drift_report', got {obj.get('kind')!r}")
+    if obj.get("schema") != SCHEMA_VERSION:
+        _fail("$.schema",
+              f"expected {SCHEMA_VERSION}, got {obj.get('schema')!r}")
+    dec = obj.get("decisions")
+    if not isinstance(dec, dict):
+        _fail("$.decisions", "missing or not an object")
+    for k in ("recorded", "replayed"):
+        if not isinstance(dec.get(k), int) or dec[k] < 0:
+            _fail(f"$.decisions.{k}", "must be a non-negative int")
+    if not isinstance(dec.get("divergence_index"), int):
+        _fail("$.decisions.divergence_index", "must be an int (-1 = match)")
+    if not isinstance(dec.get("match"), bool):
+        _fail("$.decisions.match", "must be a bool")
+    stages = obj.get("stages")
+    if not isinstance(stages, dict) or not stages:
+        _fail("$.stages", "missing or empty")
+    for name, row in stages.items():
+        p = f"$.stages[{name!r}]"
+        if not isinstance(row, dict):
+            _fail(p, "must be an object")
+        for k in ("recorded_mean", "replayed_mean", "drift_pct"):
+            if not isinstance(row.get(k), (int, float)):
+                _fail(f"{p}.{k}", "missing or not a number")
+        if row["drift_pct"] < 0:
+            _fail(f"{p}.drift_pct", "negative drift")
+    mx = obj.get("max_stage_drift_pct")
+    if not isinstance(mx, (int, float)) or mx < 0:
+        _fail("$.max_stage_drift_pct", "missing or negative")
+    counters = obj.get("counters")
+    if not isinstance(counters, dict):
+        _fail("$.counters", "missing or not an object")
+    for name, row in counters.items():
+        p = f"$.counters[{name!r}]"
+        if not isinstance(row, dict):
+            _fail(p, "must be an object")
+        for k in ("recorded", "replayed"):
+            if not isinstance(row.get(k), (int, float)):
+                _fail(f"{p}.{k}", "missing or not a number")
+
+
+def validate_flight_record(obj, path: str = "$") -> None:
+    """Flight-record artifact emitted by ``obs.recorder.FlightRecorder``."""
+    if not isinstance(obj, dict):
+        _fail(path, "record must be a JSON object")
+    if obj.get("kind") != "flight_record":
+        _fail(f"{path}.kind",
+              f"expected 'flight_record', got {obj.get('kind')!r}")
+    if obj.get("schema") != SCHEMA_VERSION:
+        _fail(f"{path}.schema",
+              f"expected {SCHEMA_VERSION}, got {obj.get('schema')!r}")
+    cap = obj.get("capacity")
+    if not isinstance(cap, int) or cap <= 0:
+        _fail(f"{path}.capacity", "must be a positive int")
+    dropped = obj.get("events_dropped")
+    if not isinstance(dropped, int) or dropped < 0:
+        _fail(f"{path}.events_dropped", "must be a non-negative int")
+    evs = obj.get("events")
+    if not isinstance(evs, list):
+        _fail(f"{path}.events", "missing or not a list")
+    if len(evs) > cap:
+        _fail(f"{path}.events", f"{len(evs)} events exceed capacity {cap}")
+    for i, ev in enumerate(evs):
+        if not isinstance(ev, dict) or "t" not in ev or "kind" not in ev:
+            _fail(f"{path}.events[{i}]", "event needs t and kind")
+    for sect in ("arrivals", "estimator_snapshots", "machines"):
+        if not isinstance(obj.get(sect), list):
+            _fail(f"{path}.{sect}", "missing or not a list")
+    if not isinstance(obj.get("stats"), dict):
+        _fail(f"{path}.stats", "missing or not an object")
+
+
 def _validate_file(path: str) -> str:
     with open(path) as fh:
         obj = json.load(fh)
     if isinstance(obj, dict) and "traceEvents" in obj:
         validate_chrome_trace(obj)
         return "chrome-trace"
+    if isinstance(obj, dict) and obj.get("kind") == "drift_report":
+        validate_drift_report(obj)
+        return "drift-report"
+    if isinstance(obj, dict) and obj.get("kind") == "flight_record":
+        validate_flight_record(obj)
+        return "flight-record"
     if isinstance(obj, dict) and "schema" in obj:
         validate_telemetry_summary(obj)
         return "telemetry-summary"

@@ -58,3 +58,10 @@ class ElasticityConfig:
     pressure_lam: float = 0.3      # EWMA weight of the pressure counter
     pressure_on: float = 2.0       # Schmitt-trigger engage level (Eq. 5.11);
     #                                tune down (~osl_up) with "osl" pressure
+    # -- SLO burn subscription (obs.slo, DESIGN.md §2.12) --------------------
+    # weight of the per-tenant SLO burn signal added to the cost-aware
+    # pressure when a monitor is attached (``PoolScaler.attach_slo``);
+    # the signal reads 0.0 when none is, so existing traces are untouched.
+    # Scaled by ``pressure_on`` so a tenant at its alert threshold
+    # (burn pressure 1.0) engages the trigger by itself at weight 1.0.
+    slo_weight: float = 1.0

@@ -106,6 +106,14 @@ class CostAwareScaler(ScalerPolicy):
     def decide(self, sig: ScaleSignals) -> int:
         pressure = (sig.osl() if self.cfg.pressure_signal == "osl"
                     else sig.at_risk(self.cfg.low_chance))
+        # subscribed SLO burn (obs.slo) rides on top of the local pressure:
+        # a tenant burning its error budget at the alert threshold
+        # contributes a full engage level even when this pool's own queue
+        # looks healthy (burn pressure is fleet-wide, normalized to 1.0 at
+        # the alert threshold).  Reads 0.0 when no monitor is attached.
+        burn = sig.slo_burn()
+        if burn > 0.0:
+            pressure += self.cfg.slo_weight * self.cfg.pressure_on * burn
         engaged = self.toggle.observe(pressure)
         over_budget = (sig.extra_machine_seconds
                        >= self.cfg.budget_machine_seconds

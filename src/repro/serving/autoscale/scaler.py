@@ -59,6 +59,9 @@ class PoolScaler:
         #: "machines", "planes"); pure recording, never read back
         self.tel = NULL
         self.scope = "units"
+        #: optional SLO burn signal (obs.slo.SLOMonitor.pressure via
+        #: ``attach_slo``); surfaced to policies as ``sig.slo_burn()``
+        self.slo_fn = None
         #: the base pool's summed cost rate, captured before any scaling:
         #: spend above it is what the cost budgets gate
         self._base_rate = self._pool_rate()
@@ -134,6 +137,13 @@ class PoolScaler:
                 self.tel.metrics.inc("scale_downs", scope=self.scope)
                 return -1
         return 0
+
+    def attach_slo(self, monitor) -> None:
+        """Subscribe this pool to a per-tenant SLO burn-rate monitor
+        (``obs.slo.SLOMonitor``): its ``pressure()`` rides into every
+        ``ScaleSignals`` snapshot as ``slo_burn()``, which the cost-aware
+        policy folds into its Schmitt-trigger pressure."""
+        self.slo_fn = monitor.pressure
 
     def step_substrate(self, now: float, cp, machines, oracle) -> int:
         """``step`` with signals built from a control-plane substrate —

@@ -133,7 +133,8 @@ def substrate_signals(scaler, cp, machines, oracle, now: float):
         osl_fn=lambda: oversubscription_level(machines, oracle.mean_std,
                                               now),
         extra_machine_seconds=scaler.extra_machine_seconds,
-        extra_cost=scaler.extra_pool_cost)
+        extra_cost=scaler.extra_pool_cost,
+        slo_fn=scaler.slo_fn)
 
 
 class ScaleSignals:
@@ -147,15 +148,17 @@ class ScaleSignals:
 
     def __init__(self, now: float, qlen: int, chances_fn=None, osl_fn=None,
                  extra_machine_seconds: float = 0.0,
-                 extra_cost: float = 0.0):
+                 extra_cost: float = 0.0, slo_fn=None):
         self.now = now
         self.qlen = qlen
         self.extra_machine_seconds = extra_machine_seconds
         self.extra_cost = extra_cost
         self._fn = chances_fn
         self._osl_fn = osl_fn
+        self._slo_fn = slo_fn
         self._chances = None
         self._osl = None
+        self._slo = None
 
     def chances(self) -> np.ndarray:
         if self._chances is None:
@@ -180,3 +183,12 @@ class ScaleSignals:
         """Queued tasks whose individual success chance is <= threshold."""
         c = self.chances()
         return int((c <= threshold).sum()) if c.size else 0
+
+    def slo_burn(self) -> float:
+        """Per-tenant SLO burn pressure (obs.slo, DESIGN.md §2.12):
+        the attached monitor's fleet-wide burn, normalized so 1.0 means
+        some tenant is at its alert threshold.  0.0 without a subscribed
+        monitor — every pre-SLO decision trace is untouched."""
+        if self._slo is None:
+            self._slo = 0.0 if self._slo_fn is None else float(self._slo_fn())
+        return self._slo

@@ -46,6 +46,7 @@ from ..core.pmf import PMF
 from ..core.pruning import PruningConfig
 from ..core.tasks import Machine, Task
 from ..models import transformer as T
+from ..obs.profiling import profiled
 from .autoscale import ElasticityConfig, PoolScaler
 from .batching import (SeqState, StepBatchingConfig, UnitBatch, step_cost,
                        task_dims)
@@ -154,6 +155,27 @@ class TimeEstimator:
                 # steps at the decode-step rate
                 mu = prompt_len * self.prefill_rate + n_new * self.decode_rate
         return max(mu, 1.0), max(self.rel_std * mu, 0.5)
+
+    def dump(self) -> dict:
+        """JSON-safe snapshot of the learned state — calibrated per-token
+        rates plus every EWMA cell.  Consumed by the flight recorder
+        (``obs.recorder``) and restored by ``load`` for offline oracle
+        fitting (``obs.fit``)."""
+        return {"rel_std": self.rel_std,
+                "prefill_rate": self.prefill_rate,
+                "decode_rate": self.decode_rate,
+                "ewma": [[op, bp, bn, batch, mu] for (op, bp, bn, batch), mu
+                         in sorted(self._ewma.items())]}
+
+    @classmethod
+    def load(cls, blob: dict) -> "TimeEstimator":
+        """Inverse of ``dump``: rebuild an estimator from a snapshot."""
+        est = cls(rel_std=float(blob.get("rel_std", 0.15)))
+        est.prefill_rate = float(blob.get("prefill_rate", est.prefill_rate))
+        est.decode_rate = float(blob.get("decode_rate", est.decode_rate))
+        for op, bp, bn, batch, mu in blob.get("ewma", []):
+            est._ewma[(str(op), int(bp), int(bn), int(batch))] = float(mu)
+        return est
 
 
 # ---------------------------------------------------------------------------
@@ -341,9 +363,13 @@ class _UnitRunner:
         c = max(1, min(self.cfgb.step_token_budget, eng.cfg.max_len - 1))
         toks = jnp.zeros((1, c), jnp.int32)
         pk = jnp.zeros((mc.n_layers, 1, 0, hkv, hd), jnp.bfloat16)
-        jax.block_until_ready(self._chunk(eng.params, toks, pk, pk)[0])
+        jax.block_until_ready(
+            profiled("chunk_prefill", self._chunk, eng.params, toks, pk,
+                     pk)[0])
         t1 = time.perf_counter()
-        jax.block_until_ready(self._chunk(eng.params, toks, pk, pk)[0])
+        jax.block_until_ready(
+            profiled("chunk_prefill", self._chunk, eng.params, toks, pk,
+                     pk)[0])
         self.rp = max(time.perf_counter() - t1, 1e-9) / c
         for b in eng.cfg.batch_buckets:
             if b > self.cfgb.max_batch:
@@ -353,9 +379,11 @@ class _UnitRunner:
             tk = jnp.zeros((b,), jnp.int32)
             args = (eng.params, self.pages["kp"], self.pages["vp"],
                     tabs, lens, tk)
-            jax.block_until_ready(self._pdec(*args)[0])
+            jax.block_until_ready(
+                profiled("paged_decode_step", self._pdec, *args)[0])
             t2 = time.perf_counter()
-            jax.block_until_ready(self._pdec(*args)[0])
+            jax.block_until_ready(
+                profiled("paged_decode_step", self._pdec, *args)[0])
             if b == 1:
                 self.rd = max(time.perf_counter() - t2, 1e-9)
         return time.perf_counter() - t0
@@ -448,7 +476,8 @@ class _UnitRunner:
                 pk = pv = jnp.zeros(
                     (mc.n_layers, 1, 0, mc.n_kv_heads, mc.resolved_head_dim),
                     jnp.bfloat16)
-            logits, kn, vn = self._chunk(eng.params, toks, pk, pv)
+            logits, kn, vn = profiled("chunk_prefill", self._chunk,
+                                      eng.params, toks, pk, pv)
             jax.block_until_ready(logits)
             st["k"].append(np.asarray(kn[:, 0]))
             st["v"].append(np.asarray(vn[:, 0]))
@@ -474,7 +503,8 @@ class _UnitRunner:
                 toks[i] = st["cur"]
                 tabs[i] = st["tab"]
                 lens[i] = st["len"]
-            logits, kp, vp = self._pdec(
+            logits, kp, vp = profiled(
+                "paged_decode_step", self._pdec,
                 eng.params, self.pages["kp"], self.pages["vp"],
                 jnp.asarray(tabs), jnp.asarray(lens), jnp.asarray(toks))
             jax.block_until_ready(logits)

@@ -86,7 +86,7 @@ def test_serve_cli_telemetry_out(tmp_path):
                 "--events-out", str(events)])
     stats = json.loads(out)
     tel = stats["telemetry"]
-    assert tel["schema"] == 2
+    assert tel["schema"] == 3
     # every consolidated counter mirrors its legacy top-level twin
     for k, v in tel["counters"].items():
         assert stats.get(k, 0) == v, k
@@ -103,7 +103,7 @@ def test_serve_cli_telemetry_out(tmp_path):
 def test_serve_cli_closed_loop():
     """--workload closed_loop drives the cluster with multi-turn sessions;
     the JSON summary carries per-turn and per-tenant counters and the
-    consolidated telemetry validates against schema 2."""
+    consolidated telemetry validates against the current schema."""
     from repro.obs import validate_telemetry_summary
 
     out = _run(["repro.launch.serve", "--workload", "closed_loop:6:2",

@@ -1,0 +1,497 @@
+"""Closed observability loop (DESIGN.md §2.12): flight-recorder ring +
+zero perturbation, TimeEstimator dump/load, artifact round trips, the
+control replay's exact decision match, telemetry-fitted oracle drift
+bounds, per-tenant SLO burn-rate monitors + the autoscaler subscription,
+tenant-labelled exporter round trips, and the schema-3 validators.
+No JAX anywhere in this file — stub-execution engines only."""
+
+import json
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.pruning import PruningConfig
+from repro.core.simulation import PETOracle
+from repro.core.tasks import PETMatrix
+from repro.obs import (SCHEMA_VERSION, FlightRecorder, MetricsRegistry,
+                       SLOConfig, SLOMonitor, Telemetry, chrome_trace,
+                       drift_report, fit_oracle, fit_table, load_record,
+                       parse_prometheus, validate_chrome_trace,
+                       validate_drift_report, validate_flight_record,
+                       validate_slo_alert, validate_telemetry_summary)
+from repro.serving.autoscale.config import ElasticityConfig
+from repro.serving.autoscale.policies import CostAwareScaler
+from repro.serving.autoscale.scaler import PoolScaler
+from repro.serving.autoscale.signals import ScaleSignals, substrate_signals
+from repro.serving.engine import (EngineConfig, Request, ServingEngine,
+                                  TimeEstimator)
+
+
+# ---------------------------------------------------------------------------
+# trace helpers (the decision-equivalence idiom from test_obs.py)
+# ---------------------------------------------------------------------------
+
+def _pet(seed=3, ttypes=("generate",), mtypes=("m0",), mean_range=(8, 16)):
+    rng = np.random.default_rng(seed)
+    return PETMatrix.generate(list(ttypes), list(mtypes), rng,
+                              mean_range=mean_range)
+
+
+def _request_trace(n=40, seed=1, n_prompts=5, deadline=80.0, rate=0.5):
+    rng = np.random.default_rng(seed)
+    prompts = [tuple(rng.integers(1, 1000, size=8).tolist())
+               for _ in range(n_prompts)]
+    out, t = [], 0.0
+    for _ in range(n):
+        out.append((t, Request(
+            prompt=prompts[int(rng.integers(0, n_prompts))], op="generate",
+            n_new=int(rng.integers(1, 4)), seed=int(rng.integers(0, 2)),
+            deadline=t + deadline)))
+        t += float(rng.exponential(1.0 / rate))
+    return out
+
+
+PRUNED_CFG = dict(heuristic="MSD", merging="conservative",
+                  position_finder=None,
+                  pruning=PruningConfig(initial_defer_threshold=0.1,
+                                        base_drop_threshold=0.3,
+                                        dynamic_defer=True))
+MERGE_CFG = dict(heuristic="EDF", merging="adaptive", position_finder=None,
+                 pruning=None)
+# low-utilization configuration for the fitted-oracle drift bound: ample
+# deadlines, no merging/pruning, two units — queueing noise stays sub-tick
+CALM_CFG = dict(heuristic="EDF", merging="none", position_finder=None,
+                pruning=None)
+
+
+def _stub_engine(trace, tel=None, cfg_kw=PRUNED_CFG, n_units=1):
+    eng = ServingEngine(None, None, EngineConfig(
+        n_units=n_units, elasticity=None, result_cache=False,
+        prefix_cache=False, **cfg_kw),
+        stub_oracle=PETOracle(_pet(), seed=11))
+    if tel is not None:
+        eng.attach_telemetry(tel)
+    eng.cp.trace = []
+    stats = eng.run(trace)
+    return eng, stats
+
+
+def _record_run(trace, cfg_kw=MERGE_CFG, n_units=1, capacity=1 << 15,
+                **rec_kw):
+    """One recorded stub-engine run: the serve-CLI wiring in miniature."""
+    rec = FlightRecorder(capacity=capacity, **rec_kw)
+    for t, item in trace:
+        rec.note_arrival(t, item)
+    eng, stats = _stub_engine(trace, rec, cfg_kw, n_units)
+    rec.note_machines(eng.machines)
+    rec.note_engine_config(eng.cfg)
+    rec.note_stats(stats)
+    return rec, eng, stats
+
+
+def _json_roundtrip(obj):
+    return json.loads(json.dumps(obj))
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+class TestFlightRecorder:
+    def test_ring_bound_and_drop_count(self):
+        rec = FlightRecorder(capacity=16)
+        for i in range(50):
+            rec.event(float(i), "arrive", req=i)
+        assert len(rec.events) == 16
+        assert rec.events_dropped == 34
+        art = rec.to_artifact()
+        validate_flight_record(art)
+        # the ring keeps the newest suffix, oldest first
+        assert [e["req"] for e in art["events"]] == list(range(34, 50))
+
+    @pytest.mark.parametrize("cfg_kw", [MERGE_CFG, PRUNED_CFG],
+                             ids=["edf-adaptive", "msd-pruned"])
+    def test_recorder_attached_is_zero_perturbation(self, cfg_kw):
+        """Acceptance pin: a recorder-attached run is decision-identical
+        to a recorder-off run — the recorder only ever gets written to."""
+        trace = _request_trace(n=40, deadline=20.0, rate=2.0)
+        eng_on, st_on = _stub_engine(trace, FlightRecorder(capacity=4096),
+                                     cfg_kw)
+        eng_off, st_off = _stub_engine(trace, None, cfg_kw)
+        assert eng_on.cp.trace == eng_off.cp.trace
+        assert {k: v for k, v in st_on.items() if "wall" not in k} == \
+            {k: v for k, v in st_off.items() if "wall" not in k}
+
+    def test_estimator_dump_load_roundtrip(self):
+        est = TimeEstimator(rel_std=0.2)
+        est.calibrate(0.11, 0.42)
+        key = est.key("generate", 8, 3, 1)
+        est.observe(key, 12.5)
+        est.observe(key, 14.0)
+        est2 = TimeEstimator.load(_json_roundtrip(est.dump()))
+        # warm (EWMA) and cold (calibrated-rate) paths both survive
+        assert est2.mean_std("generate", 8, 3, 1) == \
+            est.mean_std("generate", 8, 3, 1)
+        est_cold = TimeEstimator()
+        est_cold.calibrate(0.11, 0.42)
+        est2_cold = TimeEstimator.load(_json_roundtrip(est_cold.dump()))
+        assert est2_cold.mean_std("generate", 200, 5, 2) == \
+            est_cold.mean_std("generate", 200, 5, 2)
+
+    def test_periodic_estimator_snapshots(self):
+        rec = FlightRecorder(capacity=64, snapshot_interval=10.0)
+        rec.watch_estimator(TimeEstimator())
+        for i in range(5):
+            rec.event(i * 7.0, "arrive", req=i)
+        # t = 0 (first event), 14, 28 — spaced >= the interval
+        assert [s["t"] for s in rec.est_snapshots] == [0.0, 14.0, 28.0]
+        assert all("prefill_rate" in s["estimator"]
+                   for s in rec.est_snapshots)
+
+    def test_artifact_roundtrip_through_disk(self, tmp_path):
+        trace = _request_trace(n=12, deadline=80.0, rate=0.5)
+        rec, eng, stats = _record_run(trace, MERGE_CFG, n_units=2)
+        path = tmp_path / "record.json"
+        rec.save(str(path))
+        obj = load_record(str(path))           # validates on load
+        assert obj["kind"] == "flight_record"
+        assert obj["schema"] == SCHEMA_VERSION
+        assert len(obj["arrivals"]) == len(trace)
+        assert len(obj["machines"]) == 2
+        assert obj["engine_config"]["heuristic"] == "EDF"
+        assert obj["engine_config"]["merging"] == "adaptive"
+        assert obj["stats"]["completed"] == stats["completed"]
+
+
+# ---------------------------------------------------------------------------
+# replay: the control experiment and the fitted-oracle drift audit
+# ---------------------------------------------------------------------------
+
+class TestControlReplay:
+    @pytest.mark.parametrize("cfg_kw", [MERGE_CFG, PRUNED_CFG],
+                             ids=["edf-adaptive", "msd-pruned"])
+    def test_control_replay_matches_decisions_exactly(self, cfg_kw):
+        """Acceptance pin: replaying a stub-engine recording through the
+        simulator under the *same* oracle reproduces the decision trace
+        bit-for-bit and every stage mean exactly (trace equivalence)."""
+        trace = _request_trace(n=40, deadline=20.0, rate=2.0)
+        rec, eng, stats = _record_run(trace, cfg_kw)
+        record = _json_roundtrip(rec.to_artifact())
+        report = drift_report(record, oracle=PETOracle(_pet(), seed=11),
+                              control=True)
+        validate_drift_report(report)
+        assert report["control"] is True
+        assert report["events_truncated"] == 0
+        assert report["decisions"]["match"] is True
+        assert report["decisions"]["divergence_index"] == -1
+        assert report["decisions"]["recorded"] == \
+            report["decisions"]["replayed"] > 0
+        assert report["max_stage_drift_pct"] == 0.0
+        for row in report["counters"].values():
+            assert row["gap"] == 0
+
+    def test_ring_wrap_aligns_on_recorded_suffix(self):
+        trace = _request_trace(n=40, deadline=20.0, rate=2.0)
+        rec, eng, stats = _record_run(trace, MERGE_CFG, capacity=64)
+        assert rec.events_dropped > 0
+        record = _json_roundtrip(rec.to_artifact())
+        report = drift_report(record, oracle=PETOracle(_pet(), seed=11),
+                              control=True)
+        assert report["events_truncated"] == rec.events_dropped
+        # the surviving decision suffix still matches the replayed tail
+        assert report["decisions"]["match"] is True
+
+    def test_replay_without_machine_table_fails_loudly(self):
+        trace = _request_trace(n=6)
+        rec = FlightRecorder(capacity=256)
+        for t, item in trace:
+            rec.note_arrival(t, item)
+        _stub_engine(trace, rec, MERGE_CFG)
+        with pytest.raises(ValueError, match="machine table"):
+            drift_report(_json_roundtrip(rec.to_artifact()))
+
+
+class TestFittedReplay:
+    @pytest.fixture(scope="class")
+    def calm_record(self):
+        trace = _request_trace(n=60, seed=2, deadline=250.0, rate=0.08)
+        rec, eng, stats = _record_run(trace, CALM_CFG, n_units=2)
+        return _json_roundtrip(rec.to_artifact())
+
+    def test_fit_table_recovers_recorded_spans(self, calm_record):
+        table = fit_table(calm_record)
+        assert set(table) == {("generate", "m0")}
+        mu, sd, n = table[("generate", "m0")]
+        # PET means were drawn in [8, 16]; the span fit must land inside
+        # the support with room for sampling noise
+        assert 6.0 < mu < 20.0
+        assert sd >= 0.0
+        assert n == sum(1 for e in calm_record["events"]
+                        if e["kind"] == "exec_end")
+
+    def test_fitted_drift_within_bound(self, calm_record):
+        """Acceptance pin: record -> fit -> replay keeps every scored
+        per-stage latency divergence within 15%."""
+        report = drift_report(calm_record)    # default: fitted oracle
+        validate_drift_report(report)
+        assert report["stages"]["service"]["scored"]
+        assert report["stages"]["latency"]["scored"]
+        assert report["max_stage_drift_pct"] <= 15.0
+        # the replay completed the workload, not a fraction of it
+        assert report["counters"]["completed"]["replayed"] == \
+            report["counters"]["completed"]["recorded"]
+
+    def test_fit_oracle_reads_snapshot_rates_and_arrival_shape(self):
+        record = {
+            "estimator_snapshots": [{"t": 50.0, "estimator": {
+                "rel_std": 0.2, "prefill_rate": 0.5, "decode_rate": 1.5,
+                "ewma": []}}],
+            "arrivals": [{"type": "request", "prompt": [1] * 6, "n_new": 4},
+                         {"type": "request", "prompt": [1] * 6, "n_new": 4}],
+            "events": [], "machines": []}
+        orc = fit_oracle(record)
+        assert (orc.prefill_rate, orc.decode_rate, orc.rel_std) == \
+            (0.5, 1.5, 0.2)
+        # no fitted row for this pair -> rate fallback, scaled by speed
+        task = SimpleNamespace(ttype="generate", tokens=(1,) * 6)
+        machine = SimpleNamespace(mtype="m0", speed=2.0)
+        mu, sd = orc.mean_std(task, machine)
+        assert mu == pytest.approx((6 * 0.5 + 4 * 1.5) / 2.0)
+        assert sd == pytest.approx(0.2 * 9.0 / 2.0)
+        assert orc.sample(task, machine) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# SLO burn-rate monitors
+# ---------------------------------------------------------------------------
+
+class TestSLOMonitor:
+    def test_starved_tenant_alerts_compliant_stays_silent(self):
+        tel = Telemetry()
+        m = tel.metrics
+        cfg = SLOConfig(objective=0.95, windows=(20.0, 60.0),
+                        burn_threshold=2.0, min_requests=3, cooldown=1e9)
+        mon = SLOMonitor(["gold", "free"], tel, cfg)
+        for step in range(14):
+            t = step * 10.0
+            for _ in range(2):
+                # gold completes on time; free misses everything
+                m.inc("tenant_completed", tenant="gold")
+                m.inc("tenant_on_time", tenant="gold")
+                m.inc("tenant_completed", tenant="free")
+                m.inc("tenant_missed", tenant="free")
+            mon.step(t)
+        assert [a["tenant"] for a in mon.alerts] == ["free"]  # one: cooldown
+        for ev in tel.events:
+            if ev["kind"] == "slo_alert":
+                validate_slo_alert(ev)
+                assert ev["tenant"] == "free"
+        s = mon.summary()
+        assert s["free"]["alerts"] == 1 and s["free"]["burn"] > 2.0
+        assert s["gold"]["alerts"] == 0 and s["gold"]["burn"] == 0.0
+        assert mon.pressure() > 1.0
+        assert any(k.startswith("slo_burn{")
+                   for k in m.snapshot()["gauges"])
+
+    def test_alert_needs_every_window_burning(self):
+        """Multi-window AND: a short burst that never dirties the long
+        window (not enough data there) must not alert."""
+        tel = Telemetry()
+        cfg = SLOConfig(objective=0.95, windows=(10.0, 1000.0),
+                        burn_threshold=2.0, min_requests=50)
+        mon = SLOMonitor(["t0"], tel, cfg)
+        for step in range(5):
+            tel.metrics.inc("tenant_completed", tenant="t0", value=2.0)
+            tel.metrics.inc("tenant_missed", tenant="t0", value=2.0)
+            mon.step(step * 5.0)
+        assert mon.alerts == [] and mon.pressure() == 0.0
+
+    def test_engine_integration_starved_gold_tier(self):
+        """Attached to a live stub engine: a tenant with impossible
+        deadlines fires slo_alert; the relaxed tenant stays silent."""
+        trace = []
+        for i in range(30):
+            t = i * 4.0
+            tenant = "gold" if i % 2 == 0 else "free"
+            deadline = t + 2.0 if tenant == "gold" else t + 600.0
+            trace.append((t, Request(prompt=(1, 2, 3, i), op="generate",
+                                     n_new=2, deadline=deadline,
+                                     tenant=tenant)))
+        tel = Telemetry()
+        eng = ServingEngine(None, None, EngineConfig(
+            n_units=1, elasticity=None, result_cache=False,
+            prefix_cache=False, **CALM_CFG),
+            stub_oracle=PETOracle(_pet(), seed=11))
+        eng.attach_telemetry(tel)
+        mon = SLOMonitor(["gold", "free"], tel,
+                         SLOConfig(objective=0.9, windows=(80.0, 240.0),
+                                   burn_threshold=2.0, min_requests=2,
+                                   cooldown=1e9))
+        mon.attach(eng)
+        eng.run(trace)
+        assert any(a["tenant"] == "gold" for a in mon.alerts)
+        assert all(a["tenant"] == "gold" for a in mon.alerts)
+        for ev in tel.events:
+            if ev["kind"] == "slo_alert":
+                validate_slo_alert(ev)
+
+    def test_cost_aware_policy_subscribes_to_burn(self):
+        """The subscription changes decisions: an idle pool drains without
+        a monitor, but a tenant burning past the alert threshold charges
+        the Schmitt trigger into a scale-up."""
+        cfg = ElasticityConfig(policy="cost-aware", slo_weight=1.0)
+        pol = CostAwareScaler(cfg)
+        acts = [pol.decide(ScaleSignals(now=float(i), qlen=0))
+                for i in range(8)]
+        assert set(acts) == {-1}
+        pol = CostAwareScaler(cfg)
+        acts = [pol.decide(ScaleSignals(now=float(i), qlen=0,
+                                        slo_fn=lambda: 1.5))
+                for i in range(8)]
+        assert 1 in acts
+
+    def test_pool_scaler_attach_slo_rides_into_signals(self):
+        class _Pool:
+            def __init__(self):
+                self.n = 1
+
+            def size(self):
+                return self.n
+
+            def grow(self, now):
+                self.n += 1
+                return 0.0
+
+            def shrink(self, now):
+                self.n = max(self.n - 1, 0)
+                return True
+
+        scaler = PoolScaler(ElasticityConfig(policy="cost-aware",
+                                             max_extra=2), _Pool(), 1)
+        sig = substrate_signals(scaler, SimpleNamespace(batch=[],
+                                                        pruner=None),
+                                [], None, 0.0)
+        assert sig.slo_burn() == 0.0          # detached: provably inert
+        scaler.attach_slo(SimpleNamespace(pressure=lambda: 3.0))
+        sig = substrate_signals(scaler, SimpleNamespace(batch=[],
+                                                        pruner=None),
+                                [], None, 1.0)
+        assert sig.slo_burn() == 3.0
+
+
+# ---------------------------------------------------------------------------
+# exporters: tenant labels survive both export formats
+# ---------------------------------------------------------------------------
+
+class TestTenantExporters:
+    def test_prometheus_tenant_roundtrip(self):
+        m = MetricsRegistry()
+        m.inc("tenant_completed", tenant="gold")
+        m.inc("tenant_completed", tenant="free")
+        m.inc("tenant_completed", tenant="free")
+        m.observe("tenant_latency", 12.5, tenant="gold")
+        m.gauge("slo_burn", 0.5, tenant="gold")
+        parsed = parse_prometheus(m.to_prometheus())
+        assert parsed[("tenant_completed", (("tenant", "gold"),))] == 1.0
+        assert parsed[("tenant_completed", (("tenant", "free"),))] == 2.0
+        assert parsed[("slo_burn", (("tenant", "gold"),))] == 0.5
+        assert any(name.startswith("tenant_latency")
+                   for name, _ in parsed)
+
+    def test_chrome_trace_spans_carry_tenant_tier(self):
+        tel = Telemetry()
+        tel.event(0.0, "arrive", req=0, plane=0, ttype="generate",
+                  deadline=10.0, tenant="gold")
+        tel.event(5.0, "complete", req=0, task=0, latency=5.0, slack=5.0,
+                  on_time=True, tenant="gold", plane=0)
+        tel.event(1.0, "arrive", req=1, plane=0, ttype="generate",
+                  deadline=10.0)
+        obj = chrome_trace(tel.events)
+        validate_chrome_trace(obj)
+        names = {e["name"] for e in obj["traceEvents"]
+                 if e.get("cat") == "request"}
+        assert "req 0 [gold]" in names        # tenant tier in the track
+        assert "req 1" in names               # untagged traffic unchanged
+
+
+# ---------------------------------------------------------------------------
+# schema 3
+# ---------------------------------------------------------------------------
+
+class TestSchema3:
+    def test_closed_loop_summary_validates(self):
+        """A tenant-labelled closed-loop session run through the
+        WorkloadDriver produces a summary that passes the schema-3
+        telemetry validator (the serve-CLI consolidation in miniature)."""
+        from repro.serving.cluster import Plane, Router
+        from repro.serving.workload import (SessionConfig, SessionPool,
+                                            TenantSpec, WorkloadDriver)
+        eng = ServingEngine(None, None, EngineConfig(
+            n_units=2, elasticity=None, result_cache=False,
+            prefix_cache=False, heuristic="EDF", merging="adaptive"),
+            stub_oracle=PETOracle(_pet(), seed=11))
+        tel = Telemetry()
+        router = Router([Plane(eng, pid=0)], policy="round-robin",
+                        shared_detector=False, telemetry=tel)
+        pool = SessionPool(SessionConfig(users=6, turns=2,
+                                         arrival_rate=0.4, deadline=150.0,
+                                         seed=7),
+                           [TenantSpec("gold", share=0.3, slack=0.6,
+                                       priority=1),
+                            TenantSpec("free", share=0.7, slack=1.2)])
+        stats = WorkloadDriver(router, pool).run()
+        summary = {
+            "schema": SCHEMA_VERSION,
+            "counters": {k: v for k, v in stats.items()
+                         if isinstance(v, (int, float))
+                         and "wall" not in k},
+            "wall": {k: v for k, v in stats.items()
+                     if isinstance(v, (int, float)) and "wall" in k},
+            "metrics": tel.metrics.snapshot(),
+            "workload": pool.summary()}
+        validate_telemetry_summary(summary)
+        # tenant-labelled lifecycle events flowed through the driver
+        seen = {e.get("tenant") for e in tel.events
+                if e["kind"] == "complete"}
+        assert seen <= {"gold", "free"} and seen
+
+    def test_validators_reject_malformed_payloads(self):
+        ok = {"kind": "slo_alert", "t": 1.0, "tenant": "g", "burn": 4.0,
+              "objective": 0.95, "error_rate": 0.5, "window": 60.0}
+        validate_slo_alert(ok)
+        for bad in ({**ok, "burn": -1.0}, {**ok, "objective": 0.0},
+                    {**ok, "error_rate": 1.5}, {**ok, "tenant": 7},
+                    {**ok, "window": 0.0}):
+            with pytest.raises(ValueError):
+                validate_slo_alert(bad)
+        with pytest.raises(ValueError):
+            validate_drift_report({"kind": "drift_report",
+                                   "schema": SCHEMA_VERSION})
+        with pytest.raises(ValueError, match="exceed capacity"):
+            validate_flight_record({
+                "kind": "flight_record", "schema": SCHEMA_VERSION,
+                "capacity": 2, "events_dropped": 0,
+                "events": [{"t": 0.0, "kind": "x"}] * 3,
+                "arrivals": [], "estimator_snapshots": [], "machines": [],
+                "stats": {}})
+
+    def test_schema_cli_dispatches_on_new_artifacts(self, tmp_path):
+        trace = _request_trace(n=12, deadline=80.0, rate=0.5)
+        rec, eng, stats = _record_run(trace, MERGE_CFG)
+        rpath = tmp_path / "record.json"
+        rec.save(str(rpath))
+        report = drift_report(load_record(str(rpath)),
+                              oracle=PETOracle(_pet(), seed=11),
+                              control=True)
+        dpath = tmp_path / "drift.json"
+        dpath.write_text(json.dumps(report))
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.obs.schema",
+             str(rpath), str(dpath)],
+            capture_output=True, text=True)
+        assert out.returncode == 0, out.stdout
+        assert "(flight-record)" in out.stdout
+        assert "(drift-report)" in out.stdout
