@@ -249,6 +249,40 @@ def continuous_batching_table(path="../BENCH_serving.json"):
     return "\n".join(out)
 
 
+def disaggregation_table(path="../BENCH_serving.json"):
+    """Prefill/decode disaggregation: unified vs phase-specialized fleet
+    at matched catalog cost — tokens/sec, exec cost, handoffs, and the
+    p95 decode-latency ratio under a concurrent 4k prefill (DESIGN.md
+    §2.13; benchmarks/serving.py::disaggregation)."""
+    p = os.path.join(HERE, path)
+    if not os.path.exists(p):
+        return "(run `python -m benchmarks.run --only serving` first)"
+    rows = json.load(open(p)).get("disagg_rows", [])
+    if not rows:
+        return "(re-run `python -m benchmarks.run --only serving`: " \
+               "no disagg_rows in BENCH_serving.json)"
+    head = ["mode", "substrate", "fleet $/tick", "tok/s", "exec cost",
+            "on-time", "handoffs", "p95 ratio (4k prefill)"]
+    out = ["| " + " | ".join(head) + " |", "|" + "---|" * len(head)]
+    for r in rows:
+        out.append("| " + " | ".join(str(c) for c in (
+            r["mode"], r["substrate"], f"{r['fleet_cost_rate']:g}",
+            f"{r['tokens_per_sec']:.0f}", f"{r['cost']:.1f}",
+            r["on_time"], r["handoffs"],
+            f"{r['latency_ratio_4k_prefill']}x")) + " |")
+    by_mode = {r["mode"]: r for r in rows if r["substrate"] == "engine"}
+    u, d = by_mode.get("unified"), by_mode.get("disaggregated")
+    if u and d:
+        out.append(
+            f"\nphase isolation: p95 decode under the 4k prefill "
+            f"{u['latency_ratio_4k_prefill']}x → "
+            f"{d['latency_ratio_4k_prefill']}x idle; exec cost "
+            f"{u['cost']:.0f} → {d['cost']:.0f} on a "
+            f"{d['fleet_cost_rate']:g}/tick vs {u['fleet_cost_rate']:g}/tick "
+            f"fleet ({d['handoffs']} KV handoffs at the phase boundary)")
+    return "\n".join(out)
+
+
 def sessions_table(path="../BENCH_serving.json"):
     """Closed-loop session workload: open vs closed vs staged traffic with
     per-tenant on-time split, the million-user streaming row, and the
@@ -361,6 +395,9 @@ if __name__ == "__main__":
     print("\n## §Continuous batching — tokens/sec per unit + p95 decode "
           "latency under chunked prefill\n")
     print(continuous_batching_table())
+    print("\n## §Disaggregation — prefill/decode phase planes + KV "
+          "migration (unified vs specialized at matched cost)\n")
+    print(disaggregation_table())
     print("\n## §Sessions — closed-loop users, staged DAGs, SLO tiers "
           "(million-user streaming + live-engine prefix gain)\n")
     print(sessions_table())

@@ -28,7 +28,7 @@ import time
 from dataclasses import dataclass
 
 from .appropriateness import MergeGate
-from .heuristics import MappingContext, make_heuristic
+from .heuristics import MappingContext, make_heuristic, pick_handoff_machine
 from .merging import SimilarityDetector, merge_tasks
 from .pruning import Pruner, PruningConfig
 from .tasks import Machine, Task
@@ -126,6 +126,18 @@ class Substrate:
         EVICT); already-costed quantum steps stand."""
         raise NotImplementedError
 
+    # -- prefill/decode disaggregation hooks (DESIGN.md §2.13) ----------------
+    def handoff_ready(self, task: Task, machine: Machine) -> bool:
+        """True when ``task`` just finished only its prefill phase on a
+        prefill-plane machine and must continue decoding elsewhere (the
+        substrate clipped its sequence at the prefill→decode boundary)."""
+        return False
+
+    def on_handoff(self, task: Task, src_mid: int, dst_mid: int,
+                   now: float) -> None:
+        """Perform the KV migration src→dst and register the decode
+        continuation; ``task`` rejoins ``dst`` through ``join_batch``."""
+
 
 # ---------------------------------------------------------------------------
 # the control plane
@@ -170,6 +182,11 @@ class ControlPlane:
         #: substrates that own a prefix KV cache; surfaces to heuristics as
         #: ``MappingContext.prefix_overlap`` (prefix-cache-aware mapping)
         self.prefix_fn = None
+        #: optional callable(task, src_machine, dst_machine) -> modeled KV
+        #: transfer cost in virtual ticks, wired by substrates that support
+        #: prefill/decode disaggregation (§2.13); prices the handoff delay
+        #: and the destination scoring — must be substrate-identical
+        self.migrate_cost_fn = None
         self._events: list = []
         self._seq = itertools.count()
         self._epoch: dict[int, int] = {}
@@ -276,6 +293,11 @@ class ControlPlane:
                 if m is None or epoch != self._epoch.get(mid):
                     continue  # stale event (task evicted / machine retired)
                 self._handle_finish(m)
+                self._mapping_event()
+            elif kind == "handoff":
+                # the prefill→decode boundary (§2.13): the transfer delay
+                # has elapsed — migrate KV, requeue on the decode machine
+                self._handle_handoff(*payload)
                 self._mapping_event()
             elif kind == "warm":
                 m = self._machine(payload)
@@ -395,7 +417,13 @@ class ControlPlane:
         else:
             self._misses_since_event = 0
 
-        if self.batch and any(m.free_slots > 0 for m in machines):
+        # phase-specialized planes (§2.13): fresh sequences start with their
+        # prefill, so decode-role machines never take initial mappings —
+        # they receive work through the handoff path only.  A fleet without
+        # phase roles (every machine "mixed") is untouched.
+        map_machines = [m for m in machines if m.phase != "decode"] \
+            or machines
+        if self.batch and any(m.free_slots > 0 for m in map_machines):
             ctx = MappingContext(oracle=self.sub.oracle, now=self.now,
                                  pruner=self.pruner, prefix_fn=self.prefix_fn)
             if (self.pruner is not None
@@ -409,7 +437,7 @@ class ControlPlane:
             before_defer = self.pruner.stats["deferred"] if self.pruner else 0
             if self.pruner is not None:
                 self.pruner.defer_log.clear()
-            mapped = self.heuristic.map_batch(self.batch, machines, ctx)
+            mapped = self.heuristic.map_batch(self.batch, map_machines, ctx)
             if self.pruner is not None:
                 self.stats["deferred"] += \
                     self.pruner.stats["deferred"] - before_defer
@@ -646,6 +674,44 @@ class ControlPlane:
         self._epoch[m.mid] = self._epoch.get(m.mid, 0) + 1
         self._push(t_end, "finish", (m.mid, self._epoch[m.mid]))
 
+    # -- prefill→decode handoff (DESIGN.md §2.13) -----------------------------
+    def _pick_handoff_dst(self, task: Task, src: Machine) -> Machine | None:
+        ctx = MappingContext(oracle=self.sub.oracle, now=self.now,
+                             pruner=self.pruner, prefix_fn=self.prefix_fn)
+        return pick_handoff_machine(task, src, self.sub.machines, ctx,
+                                    self.migrate_cost_fn)
+
+    def _schedule_handoff(self, task: Task, src: Machine) -> bool:
+        """First-class scheduled event at the prefill→decode boundary: pick
+        the decode machine (migration cost vs locality vs completion), then
+        let the modeled transfer delay elapse before the sequence rejoins.
+        False when no decode-capable machine exists (finish in place)."""
+        dst = self._pick_handoff_dst(task, src)
+        if dst is None:
+            return False
+        cost = (self.migrate_cost_fn(task, src, dst)
+                if self.migrate_cost_fn is not None else 0.0)
+        self._log("handoff", self._index(task),
+                  self.sub.machines.index(dst), round(cost, 6))
+        self.tel.event(self.now, "handoff", task=self._index(task),
+                       src=src.mid, dst=dst.mid, cost=round(cost, 9),
+                       plane=self.plane_id)
+        self.tel.metrics.inc("handoffs")
+        self._push(self.now + cost, "handoff", (task, src, dst))
+        return True
+
+    def _handle_handoff(self, task: Task, src: Machine, dst: Machine) -> None:
+        if dst not in self.sub.machines:
+            # retired while the transfer was in flight: re-pick
+            dst = self._pick_handoff_dst(task, src)
+            if dst is None:
+                self._drop(task, reason="handoff_lost")
+                return
+        self.sub.on_handoff(task, src.mid, dst.mid, self.now)
+        task.machine = dst.mid
+        task.status = "mapped"
+        dst.queue.append(task)
+
     def _finish_batched(self, m: Machine) -> None:
         """A quantum boundary: account the completions the walker reported
         for this instant; the trailing mapping event re-admits and starts
@@ -655,6 +721,9 @@ class ControlPlane:
             if task.status == "dropped" or task not in m.active:
                 continue  # evicted mid-quantum; already accounted
             m.active.remove(task)
+            if self.sub.handoff_ready(task, m) \
+                    and self._schedule_handoff(task, m):
+                continue    # finishes later, on the decode machine
             missed = self.sub.finish_execution(task, m, self.now)
             self._misses_since_event += missed
             self.stats["last_completion"] = max(

@@ -19,10 +19,18 @@ processing unit; ``stub`` — an oracle-timed remote-endpoint stand-in;
 resolves to whatever the owning engine runs (compiled when live, stub in
 stub-execution mode).
 
+A spec also carries a *phase* role for prefill/decode disaggregation
+(DESIGN.md §2.13): ``prefill`` machines run chunked prefills and hand the
+finished KV off, ``decode`` machines run the batched decode loops, and
+``mixed`` (the default) does both — today's unified behavior.  The phase
+rides on the mtype slot as an ``@`` suffix so every existing fleet string
+stays valid.
+
 Launcher syntax (parse/serialize roundtrip)::
 
     tpu:4:1.0:1.0,cpu:4:0.25:0.2
-    mtype:count[:speed[:cost_rate[:backend[:queue_size[:power]]]]]
+    pre@prefill:1:1.5:1.25,dec@decode:2:0.5:0.35
+    mtype[@phase]:count[:speed[:cost_rate[:backend[:queue_size[:power]]]]]
 
 No JAX imports here — the catalog must stay importable by the pure-NumPy
 simulation path.
@@ -34,10 +42,31 @@ from dataclasses import dataclass, replace
 
 from .tasks import Machine
 
-__all__ = ["BACKENDS", "DEFAULT_MTYPE", "MachineSpec", "FleetSpec"]
+__all__ = ["BACKENDS", "DEFAULT_MTYPE", "PHASES", "MachineSpec", "FleetSpec",
+           "kv_block_budget"]
 
 #: unit backend kinds (see module docstring); "auto" follows the engine mode
 BACKENDS = ("auto", "compiled", "stub", "emulated")
+
+#: phase roles for prefill/decode disaggregation; "mixed" = unified serving
+PHASES = ("mixed", "prefill", "decode")
+
+#: admission-aware KV budget weights: a prefill plane holds blocks only
+#: until the handoff migrates them out (transient working set), a decode
+#: plane accumulates every migrated prefix (resident set), mixed keeps the
+#: historical uniform budget
+_PHASE_KV_WEIGHT = {"prefill": 0.5, "decode": 1.5, "mixed": 1.0}
+
+
+def kv_block_budget(base: int, phase: str = "mixed",
+                    speed: float = 1.0) -> int:
+    """Per-unit block budget sized from the machine's role and speed: a
+    fast machine admits proportionally more prefill work per unit time, so
+    it earns a proportionally larger pool; the phase weight encodes the
+    transient-vs-resident working-set asymmetry above.  ``base`` is the
+    config-level budget (`kv_cache_blocks` / `prefix_cache_blocks`), and
+    ``mixed`` at speed 1 reproduces it exactly."""
+    return max(1, int(round(base * _PHASE_KV_WEIGHT[phase] * speed)))
 
 #: the one default machine type shared by every layer.  Historically the
 #: live engine said "tpu" while the stub engine and the simulator said
@@ -58,6 +87,7 @@ class MachineSpec:
     backend: str = "auto"       # BACKENDS member
     queue_size: int = 4         # pending slots (excl. executing task)
     power: float = 1.0          # energy per time unit
+    phase: str = "mixed"        # PHASES member (§2.13 disaggregation role)
 
     def __post_init__(self):
         if not self.mtype:
@@ -71,14 +101,22 @@ class MachineSpec:
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"have {BACKENDS}")
+        if self.phase not in PHASES:
+            raise ValueError(f"unknown phase {self.phase!r}; have {PHASES}")
 
     def build_machine(self, mid: int) -> Machine:
         return Machine(mid=mid, mtype=self.mtype, speed=self.speed,
                        queue_size=self.queue_size, cost_rate=self.cost_rate,
-                       power=self.power)
+                       power=self.power, phase=self.phase)
+
+    def kv_blocks(self, base: int) -> int:
+        """Admission-aware per-unit block budget (see kv_block_budget)."""
+        return kv_block_budget(base, self.phase, self.speed)
 
     def serialize(self) -> str:
-        out = (f"{self.mtype}:{self.count}:{self.speed:g}"
+        mt = self.mtype if self.phase == "mixed" else \
+            f"{self.mtype}@{self.phase}"
+        out = (f"{mt}:{self.count}:{self.speed:g}"
                f":{self.cost_rate:g}:{self.backend}:{self.queue_size}")
         if self.power != 1.0:           # keep the common case short
             out += f":{self.power:g}"
@@ -105,8 +143,8 @@ class FleetSpec:
 
     @classmethod
     def parse(cls, text: str) -> "FleetSpec":
-        """``mtype:count[:speed[:cost_rate[:backend[:queue_size[:power]]]]]``
-        rows, comma-separated (the ``--fleet`` launcher syntax)."""
+        """``mtype[@phase]:count[:speed[:cost_rate[:backend[:queue_size
+        [:power]]]]]`` rows, comma-separated (the ``--fleet`` syntax)."""
         specs = []
         for row in text.split(","):
             parts = [p.strip() for p in row.split(":")]
@@ -114,9 +152,12 @@ class FleetSpec:
                 raise ValueError(f"empty mtype in fleet row {row!r}")
             if len(parts) < 2 or len(parts) > 7:
                 raise ValueError(
-                    f"bad fleet row {row!r}: want mtype:count[:speed"
+                    f"bad fleet row {row!r}: want mtype[@phase]:count[:speed"
                     "[:cost_rate[:backend[:queue_size[:power]]]]]")
-            kw = dict(mtype=parts[0], count=int(parts[1]))
+            mtype, _, phase = parts[0].partition("@")
+            kw = dict(mtype=mtype, count=int(parts[1]))
+            if phase:
+                kw["phase"] = phase
             if len(parts) > 2:
                 kw["speed"] = float(parts[2])
             if len(parts) > 3:
@@ -148,9 +189,14 @@ class FleetSpec:
         return list(seen)
 
     @property
+    def disaggregated(self) -> bool:
+        """True when any row declares a non-mixed phase role (§2.13)."""
+        return any(s.phase != "mixed" for s in self.specs)
+
+    @property
     def is_homogeneous(self) -> bool:
         return len({(s.mtype, s.speed, s.cost_rate, s.backend, s.queue_size,
-                     s.power) for s in self.specs}) == 1
+                     s.power, s.phase) for s in self.specs}) == 1
 
     def expand(self) -> list:
         """Per-unit specs (count=1 each), declaration order — the exact

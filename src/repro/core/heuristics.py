@@ -26,7 +26,7 @@ from .pruning import Pruner
 from .tasks import Machine, Task
 
 __all__ = ["ExecOracle", "MappingContext", "Heuristic", "make_heuristic",
-           "HEURISTICS"]
+           "pick_handoff_machine", "HEURISTICS"]
 
 
 class ExecOracle(Protocol):
@@ -466,6 +466,40 @@ class PAM(Heuristic):
 class PAMF(PAM):
     """PAM + fairness concessions (requires ``fairness_factor > 0``)."""
     name = "PAMF"
+
+
+# --------------------------------------------------------------------------
+# Prefill→decode handoff scoring (DESIGN.md §2.13)
+# --------------------------------------------------------------------------
+
+def pick_handoff_machine(task: Task, src: Machine, machines: list[Machine],
+                         ctx: MappingContext,
+                         migrate_cost_fn=None) -> Machine | None:
+    """Decode-machine selection at the prefill→decode boundary: the MCMD
+    trade extended with the modeled KV transfer price.  Among machines that
+    still meet the deadline after paying the migration delay, the cheapest
+    (execution cost + transfer cost) wins with completion breaking ties;
+    when none can, earliest completion — QoS degrades before the budget
+    does, exactly like MCMD.  Prefix locality enters through the cost
+    model: blocks the destination already holds are not re-sent, so a
+    machine with the prefix resident scores a cheaper transfer.  The
+    source itself is excluded (it must get back to prefilling) unless it
+    is the only decode-capable machine."""
+    cands = [m for m in machines if m.phase != "prefill" and m is not src]
+    if not cands:
+        cands = [m for m in machines if m.phase != "prefill"]
+    if not cands:
+        return None
+
+    def key(m):
+        mig = (migrate_cost_fn(task, src, m)
+               if migrate_cost_fn is not None else 0.0)
+        completion = ctx.expected_completion(task, m) + mig
+        if completion <= task.effective_deadline:
+            return (0, ctx.exec_cost(task, m) + mig, completion, m.mid)
+        return (1, completion, 0.0, m.mid)
+
+    return min(cands, key=key)
 
 
 HEURISTICS = {h.name: h for h in

@@ -19,7 +19,7 @@ from typing import TYPE_CHECKING
 import numpy as np
 
 from .controlplane import ControlConfig, ControlPlane, Substrate
-from .fleet import FleetSpec
+from .fleet import FleetSpec, kv_block_budget
 from .merge_model import VideoExecModel, VideoMeta
 from .pmf import PMF
 from .pruning import PruningConfig
@@ -152,6 +152,11 @@ class SimConfig:
     # Analytic prefix reuse is bypassed under batching (the chunk walker
     # owns the prefill accounting).
     batching: "StepBatchingConfig | None" = None
+    # prefill/decode disaggregation (DESIGN.md §2.13): the KV transfer
+    # pricing used for handoff scheduling when the fleet declares phase
+    # roles.  None -> TransferCostModel() defaults; must match the engine's
+    # for decision-trace equivalence.
+    kv_transfer: "object | None" = None
 
     def control(self) -> ControlConfig:
         return ControlConfig(
@@ -256,9 +261,17 @@ class Simulator(Substrate):
         self.kvcaches: dict[int, object] = {}   # mid -> per-machine cache
         self._retired_evictions = 0             # from scaler-retired caches
         self._batches: dict[int, object] = {}   # mid -> UnitBatch walker
+        # prefill/decode disaggregation state (DESIGN.md §2.13)
+        self._handoff_pending: dict[int, bool] = {}  # tid clipped at boundary
+        self._handoff_cont: dict[int, int] = {}      # tid -> tokens remaining
+        self._xfer = None
         if self.cfg.batching is not None and self.cfg.batching.max_batch > 1:
             for m in self.machines:
                 m.max_batch = self.cfg.batching.max_batch
+            # lazy import: core stays importable without the serving package
+            from ..serving.kvcache import TransferCostModel
+            self._xfer = self.cfg.kv_transfer or TransferCostModel()
+            self.cp.migrate_cost_fn = self._migrate_cost
         if self.cfg.prefix_cache_blocks > 0:
             # lazy import: core stays importable without the serving package
             from ..serving.kvcache import CombinedPrefixIndex, PrefixKVCache
@@ -267,7 +280,7 @@ class Simulator(Substrate):
                 # machine admits/evicts its own blocks and the locality
                 # term discriminates within the pool
                 for m in self.machines:
-                    self.kvcaches[m.mid] = self._make_kvcache()
+                    self.kvcaches[m.mid] = self._make_kvcache(m)
                 self.cp.detector.prefix_index = \
                     CombinedPrefixIndex(self.kvcaches)
             else:
@@ -297,10 +310,14 @@ class Simulator(Substrate):
     def heuristic(self):
         return self.cp.heuristic
 
-    def _make_kvcache(self):
+    def _make_kvcache(self, machine: Machine | None = None):
         from ..serving.kvcache import PrefixKVCache
-        return PrefixKVCache(self.cfg.prefix_cache_blocks,
-                             self.cfg.kv_block_size,
+        blocks = self.cfg.prefix_cache_blocks
+        if machine is not None and self.cfg.kv_per_machine:
+            # admission-aware budget: phase role and speed size the pool
+            # (mixed @ speed 1 keeps the historical uniform budget)
+            blocks = kv_block_budget(blocks, machine.phase, machine.speed)
+        return PrefixKVCache(blocks, self.cfg.kv_block_size,
                              clock_fn=lambda: self.now)
 
     # -- observability ---------------------------------------------------------
@@ -415,6 +432,8 @@ class Simulator(Substrate):
 
     def finish_execution(self, task: Task, m: Machine, now: float) -> int:
         self._finish_prefix_reuse(task, m)
+        self._handoff_pending.pop(task.tid, None)   # no-dst fallback path
+        self._handoff_cont.pop(task.tid, None)
         missed = 0
         for r in task.all_requests():
             r.status = "done"
@@ -460,16 +479,35 @@ class Simulator(Substrate):
         compresses wall-clock occupancy, not the work itself."""
         from ..serving.batching import SeqState, task_dims
         cfg = self.cfg.batching
+        cont = self._handoff_cont.pop(task.tid, None)
         dur = self.oracle.sample(task, m)
-        self.stats.busy_time += dur
-        self.stats.cost += dur * m.cost_rate
-        self.stats.energy += dur * m.power
         plen, n_new = task_dims(task, cfg)
         wp = dur * cfg.prefill_fraction
-        self._unit_batch(m).join(
-            SeqState(task=task, plen=plen, n_new=n_new,
-                     prefill_rate=wp / plen,
-                     decode_step=(dur - wp) / max(n_new, 1)), now)
+        step = (dur - wp) / max(n_new, 1)
+        if cont is not None:
+            # decode continuation after a prefill-plane handoff (§2.13):
+            # the prefill plane already charged the prefill work plus the
+            # boundary token, this plane runs the remaining decode steps
+            span = step * cont
+            seq = SeqState(task=task, plen=plen, n_new=n_new,
+                           prefill_done=plen, decoded=n_new - cont,
+                           prefill_rate=wp / plen, decode_step=step)
+        elif (m.phase == "prefill" and n_new > 1
+              and any(x.phase != "prefill" for x in self.machines)):
+            # prefill plane: run to the first token only; the walker
+            # completing at the boundary triggers handoff_ready
+            self._handoff_pending[task.tid] = True
+            span = wp + step
+            seq = SeqState(task=task, plen=plen, n_new=1,
+                           prefill_rate=wp / plen, decode_step=step)
+        else:
+            span = dur
+            seq = SeqState(task=task, plen=plen, n_new=n_new,
+                           prefill_rate=wp / plen, decode_step=step)
+        self.stats.busy_time += span
+        self.stats.cost += span * m.cost_rate
+        self.stats.energy += span * m.power
+        self._unit_batch(m).join(seq, now)
 
     def run_quantum(self, m: Machine, now: float):
         ub = self._batches.get(m.mid)
@@ -484,6 +522,44 @@ class Simulator(Substrate):
         ub = self._batches.get(m.mid)
         if ub is not None:
             ub.evict(task)
+
+    # -- Substrate: prefill/decode disaggregation (DESIGN.md §2.13) ------------
+    def handoff_ready(self, task: Task, machine: Machine) -> bool:
+        return task.tid in self._handoff_pending
+
+    def on_handoff(self, task: Task, src_mid: int, dst_mid: int,
+                   now: float) -> None:
+        from ..serving.batching import task_dims
+        self._handoff_pending.pop(task.tid, None)
+        _, n_new = task_dims(task, self.cfg.batching)
+        self._handoff_cont[task.tid] = n_new - 1
+        src = self.kvcaches.get(src_mid)
+        dst = self.kvcaches.get(dst_mid)
+        if src is not None and dst is not None and task.tokens:
+            # analytic payload-free block move, same trie surgery as the
+            # live engine's arena-reference migration
+            from ..serving.kvcache import migrate
+            sm = next(x for x in self.machines if x.mid == src_mid)
+            dm = next(x for x in self.machines if x.mid == dst_mid)
+            migrate(src, dst, task.tokens, cost_model=self._xfer,
+                    src_speed=sm.speed, dst_speed=dm.speed, now=now,
+                    src_mid=src_mid, dst_mid=dst_mid, tel=self._tel)
+
+    def _migrate_cost(self, task: Task, src: Machine, dst: Machine) -> float:
+        """Modeled KV transfer cost for handoff scheduling.  Computed from
+        the task's prompt dims minus the destination's already-resident
+        prefix, so the router weighs migration volume against locality.
+        Must be substrate-identical: the stub engine and the sim both see
+        the same (empty-until-populated) caches and the same dims."""
+        from ..serving.batching import task_dims
+        plen, _ = task_dims(task, self.cfg.batching)
+        bs = self.cfg.kv_block_size
+        have = 0
+        cache = self.kvcaches.get(dst.mid)
+        if cache is not None and task.tokens:
+            have = cache.peek(task.tokens) // bs
+        n_blocks = max(0, plen // bs - have)
+        return self._xfer.cost(n_blocks, bs, src.speed, dst.speed)
 
     def on_drop(self, task: Task, now: float) -> None:
         for r in task.all_requests():
@@ -570,7 +646,7 @@ class _SimMachinePool:
             m.max_batch = sim.cfg.batching.max_batch
         sim.machines.append(m)
         if sim.cfg.kv_per_machine and sim.cfg.prefix_cache_blocks > 0:
-            cache = sim._make_kvcache()
+            cache = sim._make_kvcache(m)
             if sim._tel is not None:
                 cache.tel = sim._tel
                 cache.tel_attrs = {"plane": sim.cp.plane_id,
@@ -591,5 +667,17 @@ class _SimMachinePool:
         sim._batches.pop(m.mid, None)
         cache = sim.kvcaches.pop(m.mid, None)
         if cache is not None:
+            # retire-migrates-blocks (§2.13): hand the whole trie to the
+            # cheapest surviving decode-capable cache instead of dropping
+            # it, so warm prefixes survive a scale-down
+            heirs = [x for x in machines if x.mid in sim.kvcaches]
+            if heirs and len(cache.index):
+                from ..serving.kvcache import migrate
+                heir = min(heirs, key=lambda x: (x.phase == "prefill",
+                                                 x.cost_rate, x.mid))
+                migrate(cache, sim.kvcaches[heir.mid],
+                        cost_model=sim._xfer, src_speed=m.speed,
+                        dst_speed=heir.speed, now=now, src_mid=m.mid,
+                        dst_mid=heir.mid, tel=sim._tel)
             sim._retired_evictions += cache.stats["evictions"]
         return True

@@ -116,6 +116,9 @@ class Machine:
     queue_size: int = 4             # pending slots (excl. executing task)
     cost_rate: float = 1.0          # $ per time unit (Fig. 5.19 cost model)
     power: float = 1.0              # energy per time unit
+    phase: str = "mixed"            # disaggregation role (§2.13): "prefill"
+    # machines run chunked prefills then hand the sequence off, "decode"
+    # machines run the batched decode loops, "mixed" does both
     max_batch: int = 1              # >1: step-level continuous batching —
     # the control plane co-schedules up to this many tasks on the machine
     # through the substrate's UnitBatch (DESIGN.md §2.10); ``running`` then

@@ -32,7 +32,9 @@ _CLOSE = {"complete", "drop"}
 # control-decision kinds rendered as instants on the plane's control track
 _INSTANT = {"admit", "merge", "merge_rejected", "drop", "defer", "route",
             "scale_up", "scale_down", "kv_evict", "served_at_ingest",
-            "map"}
+            "map", "handoff"}
+# kinds drawn as flow arrows between machine tracks (src -> dst), §2.13
+_FLOW = {"kv_migrate"}
 _CONTROL_TID = 1_000_000        # synthetic tid for the control-decision track
 
 
@@ -60,6 +62,7 @@ def chrome_trace(events, us_per_unit: float = 1e6) -> dict:
     procs: set[int] = set()
     threads: set[tuple[int, int]] = set()
     open_exec: dict = {}          # (plane, machine, req/task) -> start ev
+    flow_id = 0                   # incrementing id shared by each s/f pair
 
     def ts(ev):
         return ev["t"] * us_per_unit
@@ -97,6 +100,20 @@ def chrome_trace(events, us_per_unit: float = 1e6) -> dict:
                 "pid": pid, "tid": _CONTROL_TID, "ts": ts(ev),
                 "args": _args(ev),
             })
+        elif kind in _FLOW and ev.get("src") is not None \
+                and ev.get("dst") is not None:
+            # KV migration (§2.13): a flow arrow from the source machine's
+            # track to the destination's, so every prefill→decode handoff
+            # (and retirement rescue) is visually traceable in Perfetto
+            flow_id += 1
+            src, dst = int(ev["src"]), int(ev["dst"])
+            threads.add((pid, src))
+            threads.add((pid, dst))
+            common = {"name": kind, "cat": "kv", "id": flow_id,
+                      "pid": pid, "ts": ts(ev)}
+            trace.append({**common, "ph": "s", "tid": src,
+                          "args": _args(ev)})
+            trace.append({**common, "ph": "f", "bp": "e", "tid": dst})
         if kind in _INSTANT:
             trace.append({
                 "name": kind, "ph": "i", "s": "t",

@@ -27,9 +27,14 @@ __all__ = ["SCHEMA_VERSION", "validate_chrome_trace",
 #: ``tenant``-labelled lifecycle metrics.  v3 adds the observability-loop
 #: artifacts (DESIGN.md §2.12): ``flight_record`` (obs.recorder),
 #: ``drift_report`` (obs.replay) and ``slo_alert`` events (obs.slo).
-SCHEMA_VERSION = 3
+#: v4 adds prefill/decode disaggregation (DESIGN.md §2.13): ``handoff`` /
+#: ``kv_migrate`` lifecycle events, the ``kv_migrations`` /
+#: ``kv_blocks_migrated`` / ``handoffs`` counters, and Perfetto *flow*
+#: arrows (phases ``s``/``t``/``f``) drawn from the source machine's track
+#: to the destination's for every migration.
+SCHEMA_VERSION = 4
 
-_PHASES = {"X", "B", "E", "b", "e", "n", "i", "I", "M", "C"}
+_PHASES = {"X", "B", "E", "b", "e", "n", "i", "I", "M", "C", "s", "t", "f"}
 _HIST_KEYS = {"count", "mean", "min", "max", "p50", "p95", "p99"}
 
 
@@ -68,6 +73,8 @@ def validate_chrome_trace(obj) -> None:
                 _fail(p + ".dur", "complete event needs dur >= 0")
         if ph in ("b", "e", "n") and "id" not in ev:
             _fail(p + ".id", "async event needs an id")
+        if ph in ("s", "t", "f") and "id" not in ev:
+            _fail(p + ".id", "flow event needs an id")
         if "args" in ev and not isinstance(ev["args"], dict):
             _fail(p + ".args", "args must be an object")
 

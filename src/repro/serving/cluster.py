@@ -108,6 +108,20 @@ class Plane:
         and retiring such a plane would strand the request."""
         return self.load() == 0 and not self.cp._events
 
+    @property
+    def phase(self) -> str:
+        """The plane's disaggregation role (DESIGN.md §2.13): ``prefill``
+        or ``decode`` when every machine declares that one phase, else
+        ``mixed`` — a phase-specialized plane advertises itself to the
+        router and the observability layer through this field."""
+        phases = {m.phase for m in self.sub.machines}
+        return phases.pop() if len(phases) == 1 else "mixed"
+
+    @property
+    def disaggregated(self) -> bool:
+        """True when this plane splits phase roles across its machines."""
+        return any(m.phase != "mixed" for m in self.sub.machines)
+
     def prefix_overlap(self, tokens) -> int:
         """Cached-prefix tokens this plane already holds for ``tokens`` —
         the same score per-plane heuristics read via

@@ -50,7 +50,8 @@ from ..obs.profiling import profiled
 from .autoscale import ElasticityConfig, PoolScaler
 from .batching import (SeqState, StepBatchingConfig, UnitBatch, step_cost,
                        task_dims)
-from .kvcache import CombinedPrefixIndex, PrefixKVCache
+from .kvcache import (CombinedPrefixIndex, PrefixKVCache, TransferCostModel,
+                      migrate)
 
 
 # ---------------------------------------------------------------------------
@@ -403,9 +404,19 @@ class _UnitRunner:
     def join(self, task: Task, reqs: list[Request], now: float,
              ub: UnitBatch) -> None:
         eng = self.eng
-        prompt = np.asarray(reqs[0].prompt if reqs else (), np.int32)
-        plen = len(prompt)
+        cont = eng._handoff_cont.pop(task.tid, None)
+        first = cont.get("first") if cont is not None else None
+        ptoks = tuple(reqs[0].prompt) if reqs else ()
         n_new = max((r.n_new for r in reqs), default=0)
+        if first is not None:
+            # decode continuation after a prefill-plane handoff (§2.13):
+            # the boundary token extends the prompt and the remaining
+            # decode budget runs here, attaching the migrated KV blocks
+            # through the normal cached-prefill path below
+            ptoks = ptoks + (first,)
+            n_new -= 1
+        prompt = np.asarray(ptoks, np.int32)
+        plen = len(prompt)
         if (not self._batchable(reqs)
                 or plen < 1 or plen + n_new > self.mp * self.ps):
             # legacy exclusive execution, priced exactly as the sequential
@@ -425,27 +436,35 @@ class _UnitRunner:
             ub.join(SeqState(task=task, plen=max(plen, 1), n_new=n_new,
                              exclusive=True, excl_left=dur), now)
             return
+        run_new = n_new
+        if (first is None and self.m.phase == "prefill" and n_new > 1
+                and any(x.phase != "prefill" for x in eng.machines)):
+            # prefill plane (§2.13): run to the boundary token only; the
+            # walker completing there triggers the control plane's handoff
+            eng._handoff_pending[task.tid] = True
+            run_new = 1
         # prefix-cache seeding: cached KV blocks stand in for the first P
         # prompt tokens, pinned until the sequence completes
         cache = eng.kvcaches.get(self.m.mid)
         hit, p0, ks, vs = None, 0, [], []
         if cache is not None and plen > 1 \
                 and plen <= eng.cfg.prefix_max_prompt:
-            hit = cache.lookup(reqs[0].prompt, max_tokens=plen - 1)
+            hit = cache.lookup(ptoks, max_tokens=plen - 1)
             if hit:
                 pfx_k, pfx_v = eng._gather_prefix(hit)
                 p0 = pfx_k.shape[1]
                 ks, vs = [pfx_k], [pfx_v]
         eng.stats["prefill_tokens"] += plen - p0
-        npg = -(-(plen + n_new) // self.ps)
+        npg = -(-(plen + run_new) // self.ps)
         tab = np.zeros((self.mp,), np.int32)
         pids = [self.free.pop() for _ in range(npg)]
         tab[:npg] = pids
-        seq = SeqState(task=task, plen=plen, n_new=n_new, prefill_done=p0)
+        seq = SeqState(task=task, plen=plen, n_new=run_new, prefill_done=p0)
         self.states[id(seq)] = {
-            "prompt": prompt, "ptoks": reqs[0].prompt, "tab": tab,
+            "prompt": prompt, "ptoks": ptoks, "tab": tab,
             "pids": pids, "hit": hit, "k": ks, "v": vs,
-            "out": [], "cur": -1, "len": 0}
+            "out": [], "cur": -1, "len": 0,
+            "pre": [first] if first is not None else []}
         ub.join(seq, now)
 
     def release(self, seq: SeqState | None) -> None:
@@ -547,8 +566,11 @@ class _UnitRunner:
         if st is None:
             return      # exclusive: ``execute`` already wrote the results
         eng = self.eng
+        # a continuation carries the boundary token produced on the prefill
+        # plane; the full output is that token plus this plane's decodes
+        out = st.get("pre", []) + st["out"]
         for r in eng._inflight.get(s.task.tid, []):
-            r.tokens = list(st["out"][:r.n_new])
+            r.tokens = list(out[:r.n_new])
         cache = eng.kvcaches.get(self.m.mid)
         if cache is not None and s.plen > 1 \
                 and s.plen <= eng.cfg.prefix_max_prompt:
@@ -622,6 +644,11 @@ class EngineConfig:
     # head-of-line blocking them.  None keeps the run-to-completion path
     # (and every existing trace) bit-identical.
     batching: StepBatchingConfig | None = None
+    # prefill/decode disaggregation (DESIGN.md §2.13): the KV transfer
+    # pricing used for handoff scheduling when the fleet declares phase
+    # roles.  None -> TransferCostModel() defaults; must match the
+    # simulator's for decision-trace equivalence.
+    kv_transfer: "object | None" = None
 
     def control(self) -> ControlConfig:
         # the hard-deadline regime rides with pruning: infeasible tasks are
@@ -700,6 +727,13 @@ class ServingEngine(Substrate):
         self._rid = 0
         self._batches: dict[int, UnitBatch] = {}    # mid -> step walker
         self._runners: dict[int, _UnitRunner] = {}  # mid -> live executor
+        # prefill/decode disaggregation state (DESIGN.md §2.13)
+        self._handoff_pending: dict[int, bool] = {}  # tid clipped at boundary
+        self._handoff_cont: dict[int, dict] = {}     # tid -> {left, first}
+        self._xfer = None
+        if cfg.batching is not None and cfg.batching.max_batch > 1:
+            self._xfer = cfg.kv_transfer or TransferCostModel()
+            self.cp.migrate_cost_fn = self._migrate_cost
         for spec in self.fleet.expand():
             self._add_unit(spec)
         self.scaler = None
@@ -799,8 +833,11 @@ class ServingEngine(Substrate):
         else:
             self.stats["warm_starts"] += 1
         if self._kv_enabled and unit.kind != "stub":
+            # admission-aware per-unit budget (§2.13): the spec's phase
+            # role and speed size this unit's block pool
             cache = PrefixKVCache(
-                self.cfg.kv_cache_blocks, self.cfg.kv_block_size,
+                spec.kv_blocks(self.cfg.kv_cache_blocks),
+                self.cfg.kv_block_size,
                 value_fn=self._block_value, clock_fn=lambda: self.clock)
             if self._tel is not None:
                 cache.tel = self._tel
@@ -949,20 +986,45 @@ class ServingEngine(Substrate):
         for t in task.all_requests():
             reqs += self.requests.pop(t.tid, [])
             self._oracle_forget(t.tid)
-        self._inflight[task.tid] = reqs
+        if task.tid in self._handoff_cont:
+            # handoff continuation: the requests moved to _inflight at the
+            # prefill-plane dispatch and must survive this second join
+            reqs = self._inflight.get(task.tid, reqs)
+        else:
+            self._inflight[task.tid] = reqs
         self.stats["executions"] += 1
         ub = self._unit_batch(m)
         unit = self._unit(m.mid)
         if self._stub or unit.kind == "stub":
             task._stub_backend = not self._stub
             cfgb = self.cfg.batching
+            cont = self._handoff_cont.pop(task.tid, None)
             dur = self.oracle.sample(task, m)
-            self.stats["cost"] += dur * m.cost_rate
             plen, n_new = task_dims(task, cfgb)
             wp = dur * cfgb.prefill_fraction
-            ub.join(SeqState(task=task, plen=plen, n_new=n_new,
-                             prefill_rate=wp / plen,
-                             decode_step=(dur - wp) / max(n_new, 1)), now)
+            step = (dur - wp) / max(n_new, 1)
+            if cont is not None:
+                # decode continuation after a prefill-plane handoff
+                # (§2.13): only the remaining decode steps are billed here
+                left = cont["left"]
+                span = step * left
+                seq = SeqState(task=task, plen=plen, n_new=n_new,
+                               prefill_done=plen, decoded=n_new - left,
+                               prefill_rate=wp / plen, decode_step=step)
+            elif (m.phase == "prefill" and n_new > 1
+                  and any(x.phase != "prefill" for x in self.machines)):
+                # prefill plane: run to the boundary token only, identical
+                # to the simulator's clip
+                self._handoff_pending[task.tid] = True
+                span = wp + step
+                seq = SeqState(task=task, plen=plen, n_new=1,
+                               prefill_rate=wp / plen, decode_step=step)
+            else:
+                span = dur
+                seq = SeqState(task=task, plen=plen, n_new=n_new,
+                               prefill_rate=wp / plen, decode_step=step)
+            self.stats["cost"] += span * m.cost_rate
+            ub.join(seq, now)
             return
         self._runners[m.mid].join(task, reqs, now, ub)
 
@@ -988,6 +1050,50 @@ class ServingEngine(Substrate):
         runner = self._runners.get(m.mid)
         if runner is not None:
             runner.release(seq)
+
+    # -- prefill/decode disaggregation (DESIGN.md §2.13) -----------------------
+    def handoff_ready(self, task: Task, machine: Machine) -> bool:
+        return task.tid in self._handoff_pending
+
+    def on_handoff(self, task: Task, src_mid: int, dst_mid: int,
+                   now: float) -> None:
+        """The prefill→decode boundary: record the continuation (boundary
+        token + remaining budget) and move the sequence's KV blocks from
+        the source unit's arena-backed cache to the destination's.  The
+        payloads are host arrays owned by the blocks, so migration moves
+        references; the destination runner re-attaches them through its
+        normal lookup→gather→cached-prefill path."""
+        self._handoff_pending.pop(task.tid, None)
+        _, n_new = task_dims(task, self.cfg.batching)
+        reqs = self._inflight.get(task.tid, [])
+        first = None
+        if reqs and reqs[0].tokens:
+            first = int(reqs[0].tokens[0])
+        self._handoff_cont[task.tid] = {"left": n_new - 1, "first": first}
+        src = self.kvcaches.get(src_mid)
+        dst = self.kvcaches.get(dst_mid)
+        if src is not None and dst is not None and task.tokens:
+            sm = next(u.machine for u in self.units
+                      if u.machine.mid == src_mid)
+            dm = next(u.machine for u in self.units
+                      if u.machine.mid == dst_mid)
+            migrate(src, dst, task.tokens, cost_model=self._xfer,
+                    src_speed=sm.speed, dst_speed=dm.speed, now=now,
+                    src_mid=src_mid, dst_mid=dst_mid, tel=self._tel)
+
+    def _migrate_cost(self, task: Task, src: Machine, dst: Machine) -> float:
+        """Modeled KV transfer cost for handoff scheduling: the prompt's
+        block count minus the destination's already-resident prefix.
+        Substrate-identical with ``Simulator._migrate_cost`` (a stub
+        engine's caches are empty, matching the batched sim's)."""
+        plen, _ = task_dims(task, self.cfg.batching)
+        bs = self.cfg.kv_block_size
+        have = 0
+        cache = self.kvcaches.get(dst.mid)
+        if cache is not None and task.tokens:
+            have = cache.peek(task.tokens) // bs
+        n_blocks = max(0, plen // bs - have)
+        return self._xfer.cost(n_blocks, bs, src.speed, dst.speed)
 
     # -- execution substrate ---------------------------------------------------
     def begin_execution(self, task: Task, m: Machine, now: float) -> float:
@@ -1051,6 +1157,8 @@ class ServingEngine(Substrate):
 
     def finish_execution(self, task: Task, m: Machine, now: float) -> int:
         reqs = self._inflight.pop(task.tid, [])
+        self._handoff_pending.pop(task.tid, None)   # no-dst fallback path
+        self._handoff_cont.pop(task.tid, None)
         # stub-backed units in a live pool return no token payload — their
         # empty results must not poison the result cache
         cacheable = (self.cfg.result_cache
@@ -1224,6 +1332,19 @@ class _EngineUnitPool:
         self.eng._runners.pop(unit.machine.mid, None)
         cache = self.eng.kvcaches.pop(unit.machine.mid, None)
         if cache is not None:
+            # retire-migrates-blocks (§2.13): hand the retiring unit's
+            # trie to the cheapest surviving decode-capable cache instead
+            # of dropping warm prefixes on the floor
+            heirs = [u.machine for u in units
+                     if u.machine.mid in self.eng.kvcaches]
+            if heirs and len(cache.index):
+                heir = min(heirs, key=lambda x: (x.phase == "prefill",
+                                                 x.cost_rate, x.mid))
+                migrate(cache, self.eng.kvcaches[heir.mid],
+                        cost_model=self.eng._xfer,
+                        src_speed=unit.machine.speed, dst_speed=heir.speed,
+                        now=now, src_mid=unit.machine.mid,
+                        dst_mid=heir.mid, tel=self.eng._tel)
             # carry the retired cache's counters so end-of-run prefix
             # stats never shrink (mirrors the simulator's bookkeeping)
             for k in self.eng._retired_kv:

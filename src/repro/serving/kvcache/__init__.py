@@ -9,8 +9,10 @@ the discrete-event simulator (analytical, payload-free).
 """
 
 from .cache import CacheHit, CombinedPrefixIndex, PrefixKVCache
+from .migrate import MigrationResult, TransferCostModel, migrate, migration_cost
 from .pool import Block, BlockPool
 from .trie import PrefixIndex, TrieNode
 
 __all__ = ["Block", "BlockPool", "CacheHit", "CombinedPrefixIndex",
-           "PrefixIndex", "PrefixKVCache", "TrieNode"]
+           "MigrationResult", "PrefixIndex", "PrefixKVCache",
+           "TransferCostModel", "TrieNode", "migrate", "migration_cost"]

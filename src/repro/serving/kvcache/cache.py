@@ -57,7 +57,8 @@ class PrefixKVCache:
         self._value_fn = value_fn           # (Block, now) -> float
         self._clock_fn = clock_fn or (lambda: 0.0)
         self.stats = {"lookups": 0, "hits": 0, "misses": 0, "inserts": 0,
-                      "evictions": 0, "tokens_reused": 0, "rejected": 0}
+                      "evictions": 0, "tokens_reused": 0, "rejected": 0,
+                      "migrated_in": 0, "migrated_out": 0}
         #: optional repro.obs Telemetry recorder + attrs stamped on every
         #: event (owner sets e.g. {"plane": 0, "machine": 3}); pure
         #: recording — nothing here is read back by cache decisions

@@ -75,7 +75,8 @@ def test_serve_cli_telemetry_out(tmp_path):
     """--trace-out/--metrics-out/--events-out artifacts validate, and the
     JSON summary carries the consolidated ``telemetry`` key while the
     legacy top-level counters stay (back-compat, kept for one release)."""
-    from repro.obs import validate_chrome_trace, validate_metrics_snapshot
+    from repro.obs import (SCHEMA_VERSION, validate_chrome_trace,
+                           validate_metrics_snapshot)
 
     trace = tmp_path / "trace.json"
     metrics = tmp_path / "metrics.json"
@@ -86,7 +87,7 @@ def test_serve_cli_telemetry_out(tmp_path):
                 "--events-out", str(events)])
     stats = json.loads(out)
     tel = stats["telemetry"]
-    assert tel["schema"] == 3
+    assert tel["schema"] == SCHEMA_VERSION
     # every consolidated counter mirrors its legacy top-level twin
     for k, v in tel["counters"].items():
         assert stats.get(k, 0) == v, k

@@ -1,0 +1,469 @@
+"""Prefill/decode disaggregation (DESIGN.md §2.13): KV block migration,
+phase-specialized planes, handoff scheduling, and the retire-migrates-blocks
+regression.
+
+Layers under test:
+  * ``serving.kvcache.migrate`` — trie-to-trie block movement preserving
+    structure, attribution and refcounts, priced by TransferCostModel;
+  * ``core.heuristics.pick_handoff_machine`` — migration cost weighed
+    against locality and expected completion;
+  * both substrates end to end — stub-engine ↔ simulator decision-trace
+    equivalence with disaggregation ON, and bitwise greedy token identity
+    across a live-engine prefill→decode handoff;
+  * pool retirement — a retiring unit's cached blocks migrate to a
+    survivor instead of being dropped (the pre-§2.13 gap).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.fleet import FleetSpec, MachineSpec, kv_block_budget
+from repro.core.heuristics import MappingContext, pick_handoff_machine
+from repro.core.simulation import PETOracle, SimConfig, Simulator
+from repro.core.simulation import _SimMachinePool
+from repro.core.tasks import Machine, PETMatrix, Task
+from repro.obs import Telemetry, validate_chrome_trace
+from repro.obs.exporters import chrome_trace
+from repro.serving.batching import StepBatchingConfig
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.kvcache import (PrefixKVCache, TransferCostModel,
+                                   migrate, migration_cost)
+
+
+def _toks(n, base=0):
+    return tuple(range(base, base + n))
+
+
+# ---------------------------------------------------------------------------
+# migrate(): trie surgery + attribution + pricing
+# ---------------------------------------------------------------------------
+
+class TestMigrate:
+    def test_whole_trie_moves_and_src_drains(self):
+        src = PrefixKVCache(16, 4)
+        dst = PrefixKVCache(16, 4)
+        a, b = _toks(12), _toks(8) + _toks(4, base=100)
+        src.insert(a)
+        src.insert(b)          # shares the first 8-token run with ``a``
+        res = migrate(src, dst)
+        assert res.blocks == 4 and res.dropped == 0
+        assert dst.index.match_len(a) == 12
+        assert dst.index.match_len(b) == 12
+        assert len(src.index) == 0
+        assert src.pool.n_free == 16
+        assert src.stats["migrated_out"] == 4
+        assert dst.stats["migrated_in"] == 4
+
+    def test_chain_migration_moves_only_the_prompt_path(self):
+        src = PrefixKVCache(16, 4)
+        dst = PrefixKVCache(16, 4)
+        a, b = _toks(8), _toks(4, base=50)
+        src.insert(a)
+        src.insert(b)
+        migrate(src, dst, a)
+        assert dst.index.match_len(a) == 8
+        assert dst.index.match_len(b) == 0      # unrelated chain stays put
+        assert src.index.match_len(b) == 4
+
+    def test_attribution_rides_along(self):
+        src = PrefixKVCache(8, 4, clock_fn=lambda: 5.0)
+        dst = PrefixKVCache(8, 4)
+        src.insert(_toks(4))
+        hit = src.lookup(_toks(5))              # hits += 1 on the block
+        src.release(hit)
+        migrate(src, dst, _toks(4), now=9.0)
+        blk = dst.index.walk(_toks(4))[0].block
+        assert blk.hits == 1
+        assert blk.last_used == 9.0             # max(src last_used, now)
+
+    def test_dedupe_merges_attribution_instead_of_copying(self):
+        src = PrefixKVCache(8, 4)
+        dst = PrefixKVCache(8, 4)
+        src.insert(_toks(8))
+        dst.insert(_toks(4))                    # first block already there
+        src.lookup(_toks(8))                    # leave it pinned on src too
+        res = migrate(src, dst, _toks(8), release_src=False)
+        assert res.blocks == 1 and res.skipped == 1
+        assert dst.index.walk(_toks(4))[0].block.hits == 1  # merged
+
+    def test_pinned_src_blocks_are_copied_but_not_freed(self):
+        src = PrefixKVCache(8, 4)
+        dst = PrefixKVCache(8, 4)
+        src.insert(_toks(8))
+        hit = src.lookup(_toks(8))              # pin both blocks
+        res = migrate(src, dst, _toks(8))
+        assert res.blocks == 2
+        assert dst.index.match_len(_toks(8)) == 8
+        assert src.index.match_len(_toks(8)) == 8   # still readable on src
+        src.release(hit)
+
+    def test_dst_exhaustion_drops_the_tail_not_the_prefix(self):
+        src = PrefixKVCache(8, 4)
+        dst = PrefixKVCache(1, 4)
+        src.insert(_toks(12))                   # 3 blocks, dst holds 1
+        res = migrate(src, dst, _toks(12), release_src=False)
+        assert res.blocks == 1 and res.dropped == 2
+        assert dst.index.match_len(_toks(12)) == 4  # prefix property intact
+
+    def test_block_size_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            migrate(PrefixKVCache(4, 4), PrefixKVCache(4, 8))
+
+    def test_cost_model_prices_by_slower_endpoint(self):
+        m = TransferCostModel(base_cost=0.5, per_token=0.01)
+        assert m.cost(0, 16) == 0.0
+        assert m.cost(4, 16) == pytest.approx(0.5 + 64 * 0.01)
+        assert m.cost(4, 16, src_speed=2.0, dst_speed=0.5) == \
+            pytest.approx(0.5 + 64 * 0.01 / 0.5)
+
+    def test_migration_cost_credits_resident_dst_prefix(self):
+        src = PrefixKVCache(8, 4)
+        dst = PrefixKVCache(8, 4)
+        src.insert(_toks(12))
+        dst.insert(_toks(4))
+        m = TransferCostModel()
+        full = migration_cost(src, PrefixKVCache(8, 4), _toks(12), m)
+        partial = migration_cost(src, dst, _toks(12), m)
+        assert partial < full
+
+    def test_migrate_emits_telemetry(self):
+        src = PrefixKVCache(8, 4)
+        dst = PrefixKVCache(8, 4)
+        src.insert(_toks(8))
+        tel = Telemetry()
+        migrate(src, dst, _toks(8), cost_model=TransferCostModel(),
+                src_mid=1, dst_mid=2, tel=tel)
+        (ev,) = tel.events_of("kv_migrate")
+        assert ev["blocks"] == 2 and ev["src"] == 1 and ev["dst"] == 2
+        assert ev["cost"] > 0
+        snap = tel.metrics.snapshot()
+        assert snap["counters"]["kv_migrations"] == 1
+        assert snap["counters"]["kv_blocks_migrated"] == 2
+
+    def test_kv_migrate_renders_as_perfetto_flow(self):
+        src = PrefixKVCache(8, 4)
+        dst = PrefixKVCache(8, 4)
+        src.insert(_toks(8))
+        tel = Telemetry()
+        migrate(src, dst, _toks(8), src_mid=1, dst_mid=2, tel=tel)
+        trace = chrome_trace(tel.events)
+        validate_chrome_trace(trace)
+        flows = [e for e in trace["traceEvents"] if e["ph"] in ("s", "f")]
+        assert len(flows) == 2
+        s, f = sorted(flows, key=lambda e: e["ph"], reverse=True)
+        assert s["ph"] == "s" and s["tid"] == 1
+        assert f["ph"] == "f" and f["tid"] == 2
+        assert s["id"] == f["id"]
+
+
+# ---------------------------------------------------------------------------
+# admission-aware per-unit block budgets (satellite)
+# ---------------------------------------------------------------------------
+
+class TestKVBudget:
+    def test_mixed_at_speed_one_is_identity(self):
+        assert kv_block_budget(512) == 512
+
+    def test_phase_and_speed_scale_the_pool(self):
+        assert kv_block_budget(512, "prefill") == 256
+        assert kv_block_budget(512, "decode") == 768
+        assert kv_block_budget(512, "decode", speed=2.0) == 1536
+        assert kv_block_budget(1, "prefill", speed=0.1) == 1  # floor
+
+    def test_spec_kv_blocks(self):
+        assert MachineSpec(phase="decode", speed=0.5).kv_blocks(512) == 384
+
+    def test_fleet_phase_roundtrip_and_flags(self):
+        fs = FleetSpec.parse("pre@prefill:1:1.5:1.25,dec@decode:2:0.5:0.35")
+        assert fs.disaggregated
+        assert [s.phase for s in fs.expand()] == \
+            ["prefill", "decode", "decode"]
+        assert FleetSpec.parse(fs.serialize()) == fs
+        assert not FleetSpec.homogeneous(2).disaggregated
+
+    def test_bad_phase_rejected(self):
+        with pytest.raises(ValueError):
+            MachineSpec(phase="verify")
+
+    def test_sim_sizes_per_machine_caches_by_phase(self):
+        fleet = FleetSpec.parse("p@prefill:1,d@decode:1")
+        sim = Simulator(
+            [], fleet,
+            PETOracle(PETMatrix.generate(
+                ["generate"], ["p", "d"], np.random.default_rng(0))),
+            SimConfig(prefix_cache_blocks=64, kv_per_machine=True))
+        sizes = {m.phase: sim.kvcaches[m.mid].pool.n_blocks
+                 for m in sim.machines}
+        assert sizes == {"prefill": 32, "decode": 96}
+
+
+# ---------------------------------------------------------------------------
+# handoff destination scoring: migration cost vs locality vs completion
+# ---------------------------------------------------------------------------
+
+def _pet(mtypes, seed=3):
+    rng = np.random.default_rng(seed)
+    return PETMatrix.generate(["generate"], mtypes, rng, mean_range=(8, 16))
+
+
+class TestHandoffScoring:
+    def _ctx(self, mtypes=("m0",)):
+        return MappingContext(oracle=PETOracle(_pet(list(mtypes))), now=0.0)
+
+    def test_prefill_machines_are_not_candidates(self):
+        src = Machine(mid=1, phase="prefill")
+        other_pre = Machine(mid=2, phase="prefill")
+        dec = Machine(mid=3, phase="decode")
+        task = Task(ttype="generate", data_id="d", op="generate")
+        got = pick_handoff_machine(task, src, [src, other_pre, dec],
+                                   self._ctx())
+        assert got is dec
+
+    def test_no_decode_capable_machine_returns_none(self):
+        src = Machine(mid=1, phase="prefill")
+        task = Task(ttype="generate", data_id="d", op="generate")
+        assert pick_handoff_machine(task, src, [src], self._ctx()) is None
+
+    def test_migration_cost_steers_toward_resident_prefix(self):
+        """Identical decode machines; the migrate-cost model says machine 3
+        already holds the prefix (cost 0) — locality must win."""
+        src = Machine(mid=1, phase="prefill")
+        d2 = Machine(mid=2, phase="decode")
+        d3 = Machine(mid=3, phase="decode")
+        task = Task(ttype="generate", data_id="d", op="generate",
+                    deadline=1e9)
+        costs = {2: 5.0, 3: 0.0}
+        got = pick_handoff_machine(
+            task, src, [src, d2, d3], self._ctx(),
+            migrate_cost_fn=lambda t, s, m: costs[m.mid])
+        assert got is d3
+
+    def test_feasible_cheap_machine_beats_fast_expensive(self):
+        """Both feasible: MCMD semantics — exec cost (plus migration)
+        decides, not raw completion."""
+        src = Machine(mid=1, phase="prefill", mtype="m0")
+        cheap = Machine(mid=2, phase="decode", mtype="m0", cost_rate=0.2)
+        fast = Machine(mid=3, phase="decode", mtype="m0", speed=4.0,
+                       cost_rate=2.0)
+        task = Task(ttype="generate", data_id="d", op="generate",
+                    deadline=1e9)
+        got = pick_handoff_machine(task, src, [src, cheap, fast],
+                                   self._ctx())
+        assert got is cheap
+
+    def test_infeasible_falls_back_to_earliest_completion(self):
+        src = Machine(mid=1, phase="prefill", mtype="m0")
+        slow = Machine(mid=2, phase="decode", mtype="m0", speed=0.1,
+                       cost_rate=0.01)
+        fast = Machine(mid=3, phase="decode", mtype="m0", speed=4.0,
+                       cost_rate=9.0)
+        task = Task(ttype="generate", data_id="d", op="generate",
+                    deadline=0.001)          # nobody makes it
+        got = pick_handoff_machine(task, src, [src, slow, fast],
+                                   self._ctx())
+        assert got is fast
+
+
+# ---------------------------------------------------------------------------
+# substrate equivalence with disaggregation ON
+# ---------------------------------------------------------------------------
+
+def _request_trace(n=40, seed=1, n_prompts=5, deadline=80.0, rate=0.5):
+    rng = np.random.default_rng(seed)
+    # prompts longer than one KV block (16 tokens) so handoffs carry a
+    # non-zero modeled transfer cost
+    prompts = [tuple(rng.integers(1, 1000, size=48).tolist())
+               for _ in range(n_prompts)]
+    out, t = [], 0.0
+    for _ in range(n):
+        out.append((t, Request(
+            prompt=prompts[int(rng.integers(0, n_prompts))], op="generate",
+            n_new=int(rng.integers(1, 4)), seed=int(rng.integers(0, 2)),
+            deadline=t + deadline)))
+        t += float(rng.exponential(1.0 / rate))
+    return out
+
+
+def _mirror_tasks(trace):
+    return [Task(ttype=req.op, data_id=str(hash(req.prompt)), op=req.op,
+                 params=req.params_sig, arrival=t, deadline=req.deadline,
+                 user=f"u{i % 8}", tokens=req.prompt)
+            for i, (t, req) in enumerate(trace)]
+
+
+class TestDisaggTraceEquivalence:
+    @pytest.mark.parametrize("heuristic", ["EDF", "MCMD"])
+    def test_same_trace_same_decisions_disaggregated(self, heuristic):
+        """The §2.13 acceptance gate: with phase roles declared, handoff
+        events (destination pick + modeled migration cost) land bit-equal
+        on both analytic substrates."""
+        pet = _pet(["pre", "dec"])
+        trace = _request_trace()
+        fleet = FleetSpec.parse("pre@prefill:1,dec@decode:1")
+        bat = StepBatchingConfig(max_batch=4, step_token_budget=32)
+        kw = dict(heuristic=heuristic, merging="adaptive", pruning=None)
+
+        eng = ServingEngine(None, None, EngineConfig(
+            fleet=fleet, elasticity=None, result_cache=False,
+            prefix_cache=False, batching=bat, **kw),
+            stub_oracle=PETOracle(pet, seed=11))
+        eng.cp.trace = []
+        stats = eng.run(trace)
+
+        sim = Simulator(_mirror_tasks(trace), fleet,
+                        PETOracle(pet, seed=11), SimConfig(batching=bat, **kw))
+        sim.cp.trace = []
+        st = sim.run()
+
+        assert sim.cp.trace == eng.cp.trace
+        hand = [e for e in sim.cp.trace if e[0] == "handoff"]
+        assert hand, "disaggregated fleet must hand sequences off"
+        for _, idx, dst, cost in hand:
+            assert dst == 1          # the one decode machine (index 1)
+            assert cost > 0          # priced by the shared transfer model
+        assert (st.on_time, st.missed, st.dropped) == \
+            (stats["on_time"], stats["missed"], stats["dropped"])
+        assert st.cost == pytest.approx(stats["cost"], abs=1e-9)
+
+    def test_unified_fleet_traces_unchanged(self):
+        """mixed-phase fleets must take the exact pre-§2.13 code path: no
+        handoff events, traces identical to a FleetSpec.homogeneous run."""
+        pet = _pet(["m0"])
+        trace = _request_trace(n=25)
+        bat = StepBatchingConfig(max_batch=4, step_token_budget=32)
+
+        def run(fleet):
+            sim = Simulator(_mirror_tasks(trace), fleet,
+                            PETOracle(pet, seed=11),
+                            SimConfig(batching=bat, merging="adaptive"))
+            sim.cp.trace = []
+            sim.run()
+            return sim.cp.trace
+
+        a = run(FleetSpec.homogeneous(2))
+        b = run(FleetSpec.parse("m0:2"))
+        assert a == b
+        assert not any(e[0] == "handoff" for e in a)
+
+
+# ---------------------------------------------------------------------------
+# retirement migrates blocks (regression — both pool adapters)
+# ---------------------------------------------------------------------------
+
+class TestRetireMigratesBlocks:
+    def test_sim_pool_shrink_rescues_cached_prefixes(self):
+        fleet = FleetSpec.homogeneous(1)
+        sim = Simulator(
+            [], fleet,
+            PETOracle(PETMatrix.generate(
+                ["generate"], ["m0"], np.random.default_rng(0))),
+            SimConfig(prefix_cache_blocks=32, kv_per_machine=True))
+        pool = _SimMachinePool(sim)
+        pool.grow(0.0)
+        extra = sim.machines[-1]
+        toks = _toks(64)
+        sim.kvcaches[extra.mid].insert(toks)
+        base_mid = sim.machines[0].mid
+        assert sim.kvcaches[base_mid].peek(toks) == 0
+        assert pool.shrink(1.0)
+        # pre-§2.13 this was dropped on the floor; now the survivor serves
+        # the prefix
+        assert sim.kvcaches[base_mid].peek(toks) == 64
+        assert extra.mid not in sim.kvcaches
+
+    def test_sim_pool_shrink_without_survivor_caches_still_works(self):
+        sim = Simulator(
+            [], FleetSpec.homogeneous(1),
+            PETOracle(PETMatrix.generate(
+                ["generate"], ["m0"], np.random.default_rng(0))),
+            SimConfig())
+        pool = _SimMachinePool(sim)
+        pool.grow(0.0)
+        assert pool.shrink(1.0)     # no kvcaches at all: plain retire
+
+
+# ---------------------------------------------------------------------------
+# live engine: bitwise token identity across the prefill→decode handoff
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+    from repro.configs.registry import ARCHS
+    from repro.models import transformer as T
+    cfg = ARCHS["smollm-360m"].reduced().scaled(
+        n_layers=1, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+        vocab=128, head_dim=32, remat=False)
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(n, seed=7, lo=4, hi=60):
+    rng = np.random.default_rng(seed)
+    return [tuple(int(x) for x in
+                  rng.integers(1, 127, size=rng.integers(lo, hi)))
+            for _ in range(n)]
+
+
+def _run_live(model, reqs, fleet=None, n_units=1):
+    cfg, params = model
+    eng = ServingEngine(cfg, params, EngineConfig(
+        n_units=n_units, fleet=fleet, elasticity=None, merging="none",
+        pruning=None, result_cache=False, max_len=96,
+        batch_buckets=(1, 2, 4),
+        batching=StepBatchingConfig(max_batch=4, step_token_budget=16)))
+    eng.cp.trace = []
+    stats = eng.run([(float(i), r) for i, r in enumerate(reqs)])
+    return eng, stats
+
+
+class TestLiveHandoffTokenIdentity:
+    def test_disaggregated_tokens_bitwise_equal_unified(self, tiny_model):
+        """The §2.13 live acceptance gate: a prefill unit produces the
+        boundary token, the KV blocks migrate between page arenas, and the
+        decode unit finishes the sequence — greedy outputs bit-identical
+        to the unified single-unit run."""
+        prompts = _prompts(6)
+        uni = [Request(prompt=p, n_new=4, deadline=1e9) for p in prompts]
+        dis = [Request(prompt=p, n_new=4, deadline=1e9) for p in prompts]
+        _, s0 = _run_live(tiny_model, uni)
+        eng, s1 = _run_live(tiny_model, dis,
+                            fleet=FleetSpec.parse("m0@prefill:1,m0@decode:1"))
+        assert s0["completed"] == s1["completed"] == len(prompts)
+        for a, b in zip(uni, dis):
+            assert a.tokens == b.tokens
+            assert len(b.tokens) == 4
+        hand = [e for e in eng.cp.trace if e[0] == "handoff"]
+        assert len(hand) == len(prompts)    # every sequence crossed planes
+        # the real arena hand-over happened: src cache drained into dst
+        phases = {m.phase: m.mid for m in eng.machines}
+        src_c = eng.kvcaches[phases["prefill"]]
+        dst_c = eng.kvcaches[phases["decode"]]
+        assert src_c.stats["migrated_out"] > 0
+        assert dst_c.stats["migrated_in"] == src_c.stats["migrated_out"]
+        assert dst_c.stats["tokens_reused"] > 0   # migrated KV was attached
+        # phase-weighted budgets (satellite): prefill 0.5x, decode 1.5x
+        assert src_c.pool.n_blocks * 3 == dst_c.pool.n_blocks
+
+    def test_handoff_telemetry_and_flow_arrows(self, tiny_model):
+        prompts = _prompts(3, seed=5)
+        reqs = [Request(prompt=p, n_new=3, deadline=1e9) for p in prompts]
+        cfg, params = tiny_model
+        eng = ServingEngine(cfg, params, EngineConfig(
+            fleet=FleetSpec.parse("m0@prefill:1,m0@decode:1"),
+            elasticity=None, merging="none", pruning=None,
+            result_cache=False, max_len=96, batch_buckets=(1, 2),
+            batching=StepBatchingConfig(max_batch=2, step_token_budget=16)))
+        tel = Telemetry()
+        eng.attach_telemetry(tel)
+        eng.run([(float(i), r) for i, r in enumerate(reqs)])
+        hand = tel.events_of("handoff")
+        migs = tel.events_of("kv_migrate")
+        assert hand and migs
+        for ev in hand:
+            assert {"task", "src", "dst", "cost"} <= set(ev)
+        snap = tel.metrics.snapshot()
+        assert snap["counters"]["handoffs"] == len(hand)
+        assert snap["counters"]["kv_migrations"] >= len(migs)
+        trace = chrome_trace(tel.events)
+        validate_chrome_trace(trace)
+        assert any(e["ph"] == "s" for e in trace["traceEvents"])
